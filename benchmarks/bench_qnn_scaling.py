@@ -1,0 +1,46 @@
+"""QNN simulation cost scaling (paper §IV-A notes exponential cost in
+network width — the reason the paper stops at width 3). Times one full
+QuanFedNode local step for growing widths, plus the Pallas zgemm /
+fidelity kernel hot spots in interpret mode vs their XLA oracles."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantum import linalg as ql, qnn
+
+
+def time_fn(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / n
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    print("# QNN local-step cost vs width (exponential state space)")
+    for widths in ((2, 2, 2), (2, 3, 2), (3, 3, 3), (3, 4, 3)):
+        key = jax.random.PRNGKey(0)
+        params = qnn.init_params(key, widths)
+        phi_in = ql.haar_state(jax.random.PRNGKey(1), widths[0], (8,))
+        u = ql.haar_unitary(jax.random.PRNGKey(2), ql.dim(widths[-1]))
+        phi_out = jnp.einsum("ab,xb->xa", u, phi_in[..., :ql.dim(widths[0])])
+
+        def step(p):
+            return qnn.local_step(p, phi_in, phi_out, widths, 1.0, 0.1)[0]
+
+        secs = time_fn(step, params)
+        dim_max = 2 ** (max(widths[:-1][0], *widths) + max(widths))
+        print(f"  widths={widths}  {secs*1e3:8.2f} ms/step "
+              f"(max unitary dim {dim_max})")
+        rows.append((f"qnn_step/{'-'.join(map(str, widths))}",
+                     secs * 1e6, f"dim={dim_max}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Classical substrate throughput at smoke scale (CPU): train-step and
+decode-step timings per architecture family — regression guard for the
+model substrate, not a TPU perf claim (that is §Roofline's job)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import concrete_batch
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import Model
+from repro.optim import AdamW
+
+ARCHS = ("qwen1.5-4b", "rwkv6-7b", "recurrentgemma-2b", "arctic-480b",
+         "musicgen-large")
+B, S = 4, 64
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    print("# smoke-scale step timings (CPU, reduced configs)")
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = AdamW(weight_decay=0.0)
+        opt_state = opt.init(params)
+        batch = concrete_batch(cfg, B, S, jax.random.PRNGKey(1), "train")
+        tstep = jax.jit(make_train_step(model, opt))
+        out = tstep(params, opt_state, batch, jnp.float32(1e-3))
+        jax.block_until_ready(out)
+        t0 = time.time()
+        n = 3
+        for _ in range(n):
+            out = tstep(params, opt_state, batch, jnp.float32(1e-3))
+            jax.block_until_ready(out)
+        train_us = (time.time() - t0) / n * 1e6
+
+        cache = model.init_cache(B, S)
+        sstep = jax.jit(make_serve_step(model), donate_argnums=(1,))
+        db = concrete_batch(cfg, B, S, jax.random.PRNGKey(2), "decode")
+        tok, logits, cache = sstep(params, cache, db, jnp.int32(0))
+        jax.block_until_ready(tok)
+        t0 = time.time()
+        for i in range(n):
+            tok, logits, cache = sstep(params, cache, db, jnp.int32(i + 1))
+            jax.block_until_ready(tok)
+        dec_us = (time.time() - t0) / n * 1e6
+
+        toks = B * S
+        print(f"  {arch:22s} train {train_us/1e3:8.1f} ms/step "
+              f"({toks/(train_us/1e6):7,.0f} tok/s)  decode "
+              f"{dec_us/1e3:7.1f} ms/tok-batch")
+        rows.append((f"train_step/{arch}", train_us,
+                     f"tok_s={toks/(train_us/1e6):.0f}"))
+        rows.append((f"decode_step/{arch}", dec_us, f"batch={B}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Beyond the paper's Fig. 2: QuantumFed on networks WIDER than the
+paper attempted. §IV-A caps width at 3 ("computational complexity
+increases exponentially"); the vectorized JAX simulator trains a 3-4-3
+network (256-dim perceptron unitaries, 3-qubit data) under the same
+federated protocol. Not in the default `benchmarks.run` set (runtime).
+
+    PYTHONPATH=src python -m benchmarks.fig2_wider
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+
+ITERS = 40
+
+
+def run(widths, n_nodes=20, n_per_round=5, n_per_node=6, seed=42):
+    key = jax.random.PRNGKey(seed)
+    _, ds, test = qdata.make_federated_dataset(
+        key, widths[0], num_nodes=n_nodes, n_per_node=n_per_node,
+        n_test=24)
+    cfg = fed.QuantumFedConfig(
+        widths=widths, num_nodes=n_nodes, nodes_per_round=n_per_round,
+        interval_length=2, eps=0.1)
+    t0 = time.time()
+    _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
+                        n_iterations=ITERS, eval_every=ITERS // 4)
+    return hist, time.time() - t0
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    print("# QuantumFed beyond the paper's width limit")
+    for widths in ((2, 3, 2), (3, 3, 3), (3, 4, 3)):
+        hist, secs = run(widths)
+        xf = hist["test_fidelity"][-1]
+        mid = hist["test_fidelity"][len(hist["test_fidelity"]) // 2]
+        print(f"  {str(widths):12s} iter{ITERS}: test_fid={xf:.4f} "
+              f"(mid {mid:.4f})  ({secs:.0f}s)")
+        rows.append((f"fig2_wider/{'-'.join(map(str, widths))}",
+                     secs * 1e6 / ITERS, f"test_fid={xf:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure plus substrate
+perf. Prints a ``name,us_per_call,derived`` CSV summary at the end.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (ablation_noniid, bench_channel_noise, bench_lemma1,
+                        bench_qnn_scaling, bench_throughput, fig2_interval,
+                        fig3_noise)
+
+SUITES = {
+    "fig2": fig2_interval.main,
+    "fig3": fig3_noise.main,
+    "lemma1": bench_lemma1.main,
+    "qnn_scaling": bench_qnn_scaling.main,
+    "throughput": bench_throughput.main,
+    "ablation_noniid": ablation_noniid.main,
+    "channel_noise": bench_channel_noise.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(SUITES)
+
+    rows = []
+    t0 = time.time()
+    for name in names:
+        if name not in SUITES:
+            print(f"unknown suite {name!r}; have {sorted(SUITES)}",
+                  file=sys.stderr)
+            sys.exit(2)
+        print(f"\n==== {name} ====")
+        SUITES[name](rows)
+    print(f"\n==== CSV summary ({time.time()-t0:.0f}s total) ====")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

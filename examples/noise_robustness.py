@@ -1,0 +1,38 @@
+"""Paper Fig. 3 at example scale: QuantumFed robustness to polluted
+training data. Trains with 30% and 70% random pairs and evaluates on
+clean test data.
+
+    PYTHONPATH=src python examples/noise_robustness.py
+"""
+import jax
+
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+
+WIDTHS = (2, 3, 2)
+
+
+def run(noise):
+    key = jax.random.PRNGKey(42)
+    _, dataset, test = qdata.make_federated_dataset(
+        key, n_qubits=2, num_nodes=50, n_per_node=4,
+        noise_ratio=noise, n_test=32)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=50,
+                               nodes_per_round=10, interval_length=2,
+                               eps=0.1)
+    _, hist = fed.train(jax.random.PRNGKey(7), cfg, dataset, test,
+                        n_iterations=40, eval_every=40)
+    return hist
+
+
+def main():
+    clean = run(0.0)["test_fidelity"][-1]
+    for noise in (0.3, 0.7):
+        h = run(noise)
+        print(f"noise {int(noise*100)}%: clean-test fidelity "
+              f"{h['test_fidelity'][-1]:.4f} (clean baseline {clean:.4f})")
+    print("paper's claim: performance stays acceptable up to ~70% noise")
+
+
+if __name__ == "__main__":
+    main()

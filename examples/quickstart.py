@@ -1,0 +1,42 @@
+"""Quickstart: train a 2-3-2 quantum neural network with QuantumFed.
+
+Reproduces the paper's core experiment at small scale: 100 quantum
+nodes with non-iid local data, 10 sampled per iteration, interval
+length 2, fidelity cost driven to ~1.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+
+WIDTHS = (2, 3, 2)          # the paper's network
+
+
+def main():
+    key = jax.random.PRNGKey(42)
+    # clean training data: pairs (|phi>, U_g|phi>) for a hidden target
+    # unitary U_g, split non-iid (sorted) across 100 nodes
+    u_target, dataset, test = qdata.make_federated_dataset(
+        key, n_qubits=2, num_nodes=100, n_per_node=4, n_test=32)
+
+    cfg = fed.QuantumFedConfig(
+        widths=WIDTHS,
+        num_nodes=100,          # N
+        nodes_per_round=10,     # N_p
+        interval_length=2,      # I_l (local steps per round)
+        eta=1.0, eps=0.1,       # paper's hyperparameters
+        aggregation="product",  # Eq. 6 (exact unitary products)
+    )
+
+    params, hist = fed.train(jax.random.PRNGKey(7), cfg, dataset, test,
+                             n_iterations=50, eval_every=10, verbose=True)
+    print(f"\nfinal: train fidelity {hist['train_fidelity'][-1]:.4f}, "
+          f"test fidelity {hist['test_fidelity'][-1]:.4f} "
+          f"(paper: ~1.0 after 50 iterations)")
+    assert hist["test_fidelity"][-1] > 0.95
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving example: greedy decode with a KV cache on a reduced
+gemma3 (5-local:1-global sliding-window pattern), exercising the same
+serve_step the decode_32k dry-run lowers at production scale.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "gemma3-27b", "--batch", "2",
+                "--prompt-len", "24", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

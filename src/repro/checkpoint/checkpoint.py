@@ -1,0 +1,75 @@
+"""npz-based checkpointing with sharding metadata.
+
+Flat-dict params map 1:1 onto npz keys ('/' is legal in npz names).
+Sharding metadata (PartitionSpec strings per param) and the training
+step are stored alongside so a restore onto a different mesh re-shards
+via device_put. Writes are atomic (tmp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    flat = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            flat.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)) and not hasattr(tree, "shape"):
+        for i, v in enumerate(tree):
+            flat.update(_flatten(v, f"{prefix}{i}/"))
+    elif tree is None:
+        pass
+    else:
+        flat[prefix[:-1]] = tree
+    return flat
+
+
+def save(path: str, params: Dict[str, jax.Array], *, step: int = 0,
+         extra: Optional[Dict[str, Any]] = None,
+         specs: Optional[Dict[str, str]] = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(params)
+    arrays = {}
+    meta = {"step": step, "extra": extra or {}, "specs": specs or {},
+            "dtypes": {}}
+    for k, v in flat.items():
+        arr = np.asarray(v)
+        if arr.dtype == jnp.bfloat16:
+            meta["dtypes"][k] = "bfloat16"
+            arr = arr.view(np.uint16)
+        arrays[k] = arr
+    d = os.path.dirname(os.path.abspath(path))
+    with tempfile.NamedTemporaryFile(dir=d, suffix=".npz",
+                                     delete=False) as f:
+        np.savez(f, **arrays)
+        tmp = f.name
+    os.replace(tmp, path)
+    with open(path + ".meta.json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, shardings: Optional[Dict[str, Any]] = None
+            ) -> Tuple[Dict[str, jax.Array], Dict[str, Any]]:
+    with np.load(path) as z:
+        arrays = {k: z[k] for k in z.files}
+    meta = {"step": 0, "extra": {}, "specs": {}, "dtypes": {}}
+    if os.path.exists(path + ".meta.json"):
+        with open(path + ".meta.json") as f:
+            meta = json.load(f)
+    out = {}
+    for k, arr in arrays.items():
+        if meta["dtypes"].get(k) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        if shardings and k in shardings:
+            out[k] = jax.device_put(arr, shardings[k])
+        else:
+            out[k] = jnp.asarray(arr)
+    return out, meta

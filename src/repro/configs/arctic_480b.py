@@ -1,0 +1,29 @@
+"""Snowflake Arctic (480B-class dense-MoE hybrid).
+
+[hf:Snowflake/snowflake-arctic-base] 35L d_model=7168 56H (GQA kv=8)
+d_ff=4864 vocab=32000, MoE 128 experts top-2 with a parallel dense
+residual FFN per layer.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    block_pattern=("moe",),
+    n_experts=128,
+    top_k=2,
+    moe_dense_residual=True,
+    rope_theta=1e6,
+    # §Perf H-A4: 32 (not 16) halves the per-microbatch FSDP expert-
+    # weight regathers; bf16 grad accumulation halves grad collectives.
+    microbatch=32,
+    accum_dtype="bfloat16",
+    q_chunk=1024,
+)

@@ -1,0 +1,80 @@
+"""The four assigned input shapes and abstract input specs for the
+multi-pod dry-run (ShapeDtypeStruct stand-ins — weak-type-correct,
+shardable, no device allocation)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model-input batch for (cfg, shape).
+
+    train/prefill: full sequences; decode: one new token per sequence.
+    Embedding-input archs (audio/vlm) get frontend-stub embeddings.
+    """
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    dt = cfg.dtype_jnp
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_kind == "tokens":
+        batch["tokens"] = _sds((b, s), I32)
+    else:
+        batch["embeddings"] = _sds((b, s, cfg.d_model), dt)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), I32)
+    if cfg.cross_attn and shape.kind != "decode":
+        # decode reads cached cross-attention k/v written at prefill
+        batch["cond"] = _sds((b, cfg.cond_len, cfg.d_model), dt)
+    if cfg.pos_kind == "mrope":
+        batch["mrope_positions"] = _sds((3, b, s), I32)
+    return batch
+
+
+BATCH_AXES = {
+    "tokens": ("act_batch", None),
+    "labels": ("act_batch", None),
+    "embeddings": ("act_batch", None, None),
+    "cond": ("act_batch", None, None),
+    "mrope_positions": (None, "act_batch", None),
+}
+
+
+def batch_axes(batch) -> Dict[str, Tuple]:
+    return {k: BATCH_AXES[k] for k in batch}
+
+
+def concrete_batch(cfg: ModelConfig, batch_size: int, seq_len: int,
+                   key: jax.Array, kind: str = "train",
+                   vocab: Optional[int] = None) -> Dict[str, jax.Array]:
+    """Small concrete batch for smoke tests / examples."""
+    vocab = vocab or cfg.vocab_size
+    ks = jax.random.split(key, 4)
+    s = 1 if kind == "decode" else seq_len
+    batch: Dict[str, jax.Array] = {}
+    if cfg.input_kind == "tokens":
+        batch["tokens"] = jax.random.randint(ks[0], (batch_size, s), 0, vocab)
+    else:
+        batch["embeddings"] = 0.02 * jax.random.normal(
+            ks[0], (batch_size, s, cfg.d_model), cfg.dtype_jnp)
+    if kind == "train":
+        batch["labels"] = jax.random.randint(ks[1], (batch_size, s), 0, vocab)
+    if cfg.cross_attn:
+        batch["cond"] = 0.02 * jax.random.normal(
+            ks[2], (batch_size, cfg.cond_len, cfg.d_model), cfg.dtype_jnp)
+    if cfg.pos_kind == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=I32)[None],
+                               (batch_size, s))
+        batch["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return batch

@@ -1,0 +1,8 @@
+"""Classical federated substrate: QuantumFed's interval-length local
+update + data-weighted aggregation (Lemma-1 additive form) for arbitrary
+JAX pytree models, with the multi-pod 'pod' mesh axis as the federation
+axis."""
+from repro.core.fed.config import FederatedConfig  # noqa: F401
+from repro.core.fed.fed_step import (  # noqa: F401
+    fed_params_axes, fed_train_round, replicate_for_pods)
+from repro.core.fed.local import local_steps  # noqa: F401

@@ -1,0 +1,42 @@
+"""QuanFedNode for classical models: I_l local optimizer steps.
+
+The classical analogue of Alg. 1: instead of update unitaries e^{ieK},
+a node produces the parameter DELTA after I_l local steps — Lemma 1's
+first-order form, which is what the additive aggregation consumes.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def local_steps(loss_fn: Callable, opt, params, opt_state, batches, lr
+                ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """Run I_l = leading-dim(batches) local steps.
+
+    batches: pytree with leading (I_l, ...) scan axis.
+    Returns (new_params, new_opt_state, stacked metrics).
+    """
+    def step(carry, batch):
+        p, s = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(p, batch)
+        p2, s2 = opt.update(grads, s, p, lr)
+        return (p2, s2), metrics
+
+    (pf, sf), metrics = jax.lax.scan(step, (params, opt_state), batches)
+    return pf, sf, metrics
+
+
+def node_delta(loss_fn: Callable, opt, params, opt_state, batches, lr
+               ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """Local steps, returning the parameter delta (fp32) instead of the
+    updated parameters — the node's 'upload'."""
+    pf, sf, metrics = local_steps(loss_fn, opt, params, opt_state,
+                                  batches, lr)
+    delta = jax.tree.map(
+        lambda a, b: a.astype(jnp.float32) - b.astype(jnp.float32),
+        pf, params)
+    return delta, sf, metrics

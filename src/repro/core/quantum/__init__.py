@@ -1,0 +1,3 @@
+"""QuantumFed core: density-matrix QNN simulator + federated training."""
+from repro.core.quantum import data, federated, linalg, qnn  # noqa: F401
+from repro.core.quantum.federated import QuantumFedConfig  # noqa: F401

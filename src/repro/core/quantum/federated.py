@@ -1,0 +1,183 @@
+"""QuantumFed: QuanFedNode (Alg. 1) + QuanFedPS (Alg. 2).
+
+Two aggregation modes are implemented:
+
+* ``"product"`` — the paper's Eq. 6: the server multiplies every node's
+  scaled update unitary ``U_{n,k} = e^{i eps (N_n/N_t) K_{n,k}}`` onto
+  the global model, interval step by interval step.
+* ``"average"`` — the paper's Eq. 8 (the Lemma-1 small-eps limit): the
+  server averages update matrices data-weighted and applies
+  ``e^{i eps K_bar_k}`` per interval step.
+
+Lemma 1 guarantees the two agree to O(eps^2); ``tests/test_quantumfed.py``
+checks this, and that interval_length=1 + full participation reproduces
+centralized training exactly (§III-C).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantum import linalg as ql
+from repro.core.quantum import qnn
+from repro.core.quantum.data import QuantumDataset
+
+
+class QuantumFedConfig(NamedTuple):
+    widths: Tuple[int, ...]
+    num_nodes: int = 100          # N
+    nodes_per_round: int = 10     # N_p
+    interval_length: int = 1      # I_l
+    eta: float = 1.0
+    eps: float = 0.1
+    minibatch: Optional[int] = None   # None => GD; int => SGD mini-batch
+    aggregation: str = "product"      # "product" (Eq.6) | "average" (Eq.8)
+    # beyond-paper: relative Hermitian noise on uploaded update matrices
+    # (hardware/channel imperfection; uploads stay exactly unitary)
+    upload_noise: float = 0.0
+
+
+def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
+                key: jax.Array, cfg: QuantumFedConfig) -> List[jax.Array]:
+    """QuanFedNode: I_l temporary-update steps on one node's local data.
+
+    Returns the per-step update matrices K_{n,k}, stacked per layer as
+    (I_l, m_l, d, d). (Update *unitaries* are formed server-side from
+    these; mathematically identical to Alg. 1's local storage and it lets
+    both aggregation modes share one node pass.)
+    """
+    n_per = phi_in.shape[0]
+
+    def one_step(carry, key_k):
+        p = carry
+        if cfg.minibatch is not None and cfg.minibatch < n_per:
+            idx = jax.random.choice(key_k, n_per, (cfg.minibatch,),
+                                    replace=False)
+            b_in, b_out = phi_in[idx], phi_out[idx]
+        else:
+            b_in, b_out = phi_in, phi_out
+        ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, cfg.eta)
+        p = qnn.apply_updates(p, ks, cfg.eps)
+        return p, ks
+
+    keys = jax.random.split(key, cfg.interval_length)
+    _, ks_seq = jax.lax.scan(one_step, params, keys)
+    return ks_seq  # list per layer: (I_l, m_l, d, d)
+
+
+def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
+                      weights: jax.Array, eps: float) -> qnn.Params:
+    """Eq. 6: U^{l,j} = prod_{k=I_l}^{1} prod_{n} e^{i eps w_n K_{n,k}},
+    then U_{t+1} = U^{l,j} U_t^{l,j}."""
+    n_nodes = weights.shape[0]
+    i_l = ks_all[0].shape[1]
+    new_params = []
+    for us, ks in zip(params, ks_all):
+        # ks: (N_p, I_l, m_l, d, d); scaled update unitaries per node/step.
+        upd = ql.expm_herm(ks * weights[:, None, None, None, None], eps)
+        acc = us
+        for k in range(i_l):
+            for n in range(n_nodes):
+                acc = jnp.einsum("jab,jbc->jac", upd[n, k], acc)
+        new_params.append(acc)
+    return new_params
+
+
+def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
+                      weights: jax.Array, eps: float) -> qnn.Params:
+    """Eq. 8: K_k = sum_n w_n K_{n,k};  U = prod_{k=I_l}^{1} e^{i eps K_k}."""
+    i_l = ks_all[0].shape[1]
+    new_params = []
+    for us, ks in zip(params, ks_all):
+        k_bar = jnp.einsum("n,nk...->k...", weights, ks)
+        upd = ql.expm_herm(k_bar, eps)  # (I_l, m_l, d, d)
+        acc = us
+        for k in range(i_l):
+            acc = jnp.einsum("jab,jbc->jac", upd[k], acc)
+        new_params.append(acc)
+    return new_params
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def server_round(params: qnn.Params, dataset: QuantumDataset,
+                 key: jax.Array, cfg: QuantumFedConfig) -> qnn.Params:
+    """One QuanFedPS iteration: sample N_p nodes, run QuanFedNode on
+    each (vmapped), aggregate update unitaries into the global model."""
+    k_sel, k_node = jax.random.split(key)
+    sel = jax.random.choice(k_sel, cfg.num_nodes, (cfg.nodes_per_round,),
+                            replace=False)
+    node_in = dataset.phi_in[sel]    # (N_p, N_n, d_in)
+    node_out = dataset.phi_out[sel]  # (N_p, N_n, d_out)
+    node_keys = jax.random.split(k_node, cfg.nodes_per_round)
+
+    ks_all = jax.vmap(node_update, in_axes=(None, 0, 0, 0, None))(
+        params, node_in, node_out, node_keys, cfg)
+
+    if cfg.upload_noise > 0.0:
+        from repro.core.quantum.channel_noise import perturb_updates
+        k_noise = jax.random.fold_in(key, 0x6e6f6973)
+        ks_all = perturb_updates(k_noise, ks_all, cfg.upload_noise)
+
+    # Data-volume weights N_n / N_t (equal-sized nodes here, but kept
+    # general so unequal splits work too).
+    n_n = jnp.full((cfg.nodes_per_round,), node_in.shape[1], jnp.float32)
+    weights = (n_n / jnp.sum(n_n)).astype(dataset.phi_in.dtype)
+
+    if cfg.aggregation == "product":
+        return aggregate_product(params, ks_all, weights, cfg.eps)
+    elif cfg.aggregation == "average":
+        return aggregate_average(params, ks_all, weights, cfg.eps)
+    raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("widths",))
+def evaluate(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
+             widths: Tuple[int, ...]) -> Dict[str, jax.Array]:
+    rho_out = qnn.outputs(params, phi_in, widths)
+    return {
+        "fidelity": jnp.mean(ql.fidelity_pure(phi_out, rho_out)),
+        "mse": jnp.mean(ql.mse_state(phi_out, rho_out)),
+    }
+
+
+def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
+          test: Tuple[jax.Array, jax.Array], n_iterations: int,
+          params: Optional[qnn.Params] = None, eval_every: int = 1,
+          verbose: bool = False) -> Tuple[qnn.Params, Dict[str, list]]:
+    """Full QuanFedPS training loop with train/test metric history."""
+    k_init, k_loop = jax.random.split(key)
+    if params is None:
+        params = qnn.init_params(k_init, cfg.widths)
+
+    train_in = dataset.phi_in.reshape(-1, dataset.phi_in.shape[-1])
+    train_out = dataset.phi_out.reshape(-1, dataset.phi_out.shape[-1])
+    test_in, test_out = test
+
+    history: Dict[str, list] = {
+        "iteration": [], "train_fidelity": [], "train_mse": [],
+        "test_fidelity": [], "test_mse": [],
+    }
+
+    def record(t, p):
+        tr = evaluate(p, train_in, train_out, cfg.widths)
+        te = evaluate(p, test_in, test_out, cfg.widths)
+        history["iteration"].append(t)
+        history["train_fidelity"].append(float(tr["fidelity"]))
+        history["train_mse"].append(float(tr["mse"]))
+        history["test_fidelity"].append(float(te["fidelity"]))
+        history["test_mse"].append(float(te["mse"]))
+        if verbose:
+            print(f"iter {t:4d}  train_fid {history['train_fidelity'][-1]:.4f}"
+                  f"  test_fid {history['test_fidelity'][-1]:.4f}"
+                  f"  train_mse {history['train_mse'][-1]:.4f}")
+
+    record(0, params)
+    keys = jax.random.split(k_loop, n_iterations)
+    for t in range(n_iterations):
+        params = server_round(params, dataset, keys[t], cfg)
+        if (t + 1) % eval_every == 0 or t == n_iterations - 1:
+            record(t + 1, params)
+    return params, history

@@ -1,0 +1,188 @@
+"""Density-matrix linear algebra for the QuantumFed simulator.
+
+All operators act on n-qubit Hilbert spaces of dimension 2**n. States are
+either pure (column vectors, shape (2**n,)) or density matrices
+(shape (2**n, 2**n)), complex dtype.
+
+Convention: qubit 0 is the MOST significant axis, i.e. a state tensor is
+reshaped as (2,)*n with axis q corresponding to qubit q.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+# The quantum simulator is small-dimensional but numerically delicate
+# (unitarity, Hermiticity): complex128 when x64 is enabled, else the
+# best available complex dtype. Resolved lazily so importing this module
+# never forces a global jax config change on the classical substrate.
+DEFAULT_DTYPE = None
+
+
+def default_dtype():
+    return jnp.complex128 if jax.config.jax_enable_x64 else jnp.complex64
+
+
+def _resolve(dtype):
+    return default_dtype() if dtype is None else dtype
+
+
+def dim(n_qubits: int) -> int:
+    return 2 ** n_qubits
+
+
+def dagger(a: jax.Array) -> jax.Array:
+    """Conjugate transpose on the last two axes."""
+    return jnp.conjugate(jnp.swapaxes(a, -1, -2))
+
+
+def kron(*ops: jax.Array) -> jax.Array:
+    """Kronecker product of a sequence of square operators."""
+    out = ops[0]
+    for op in ops[1:]:
+        out = jnp.kron(out, op)
+    return out
+
+
+def zero_state(n_qubits: int, dtype=None) -> jax.Array:
+    """|0...0> on n qubits (pure state vector)."""
+    v = jnp.zeros((dim(n_qubits),), dtype=_resolve(dtype))
+    return v.at[0].set(1.0)
+
+
+def zero_projector(n_qubits: int, dtype=None) -> jax.Array:
+    """|0...0><0...0| on n qubits."""
+    v = zero_state(n_qubits, dtype)
+    return jnp.outer(v, jnp.conjugate(v))
+
+
+def pure_density(psi: jax.Array) -> jax.Array:
+    """|psi><psi| from a state vector (batched over leading axes)."""
+    return psi[..., :, None] * jnp.conjugate(psi[..., None, :])
+
+
+def _qubit_axes(n: int):
+    return (2,) * n
+
+
+def embed_unitary(u: jax.Array, acting_on: Sequence[int], n_qubits: int) -> jax.Array:
+    """Embed a unitary acting on the qubits `acting_on` into the full
+    n-qubit space (identity on the rest).
+
+    u has shape (2**k, 2**k) with k == len(acting_on); `acting_on` lists
+    qubit indices in the order of u's tensor factors.
+    """
+    k = len(acting_on)
+    assert u.shape[-1] == dim(k), (u.shape, acting_on)
+    rest = [q for q in range(n_qubits) if q not in acting_on]
+    # Build as a tensor: u ⊗ I_rest, with axes permuted into qubit order.
+    full = jnp.kron(u, jnp.eye(dim(len(rest)), dtype=u.dtype))
+    # full's row/col tensor-axis order is acting_on + rest; permute to 0..n-1.
+    order = list(acting_on) + rest
+    perm = [order.index(q) for q in range(n_qubits)]
+    t = full.reshape(_qubit_axes(n_qubits) * 2)
+    t = jnp.transpose(t, perm + [n_qubits + p for p in perm])
+    return t.reshape(dim(n_qubits), dim(n_qubits))
+
+
+def apply_unitary(rho: jax.Array, u: jax.Array) -> jax.Array:
+    """U rho U^dagger (batched over rho's leading axes)."""
+    return jnp.einsum("ab,...bc,dc->...ad", u, rho, jnp.conjugate(u))
+
+
+def partial_trace(rho: jax.Array, keep: Sequence[int], n_qubits: int) -> jax.Array:
+    """Trace out all qubits except `keep` (ordered). Supports a single
+    leading batch axis via vmap-friendly pure reshapes.
+    """
+    keep = list(keep)
+    traced = [q for q in range(n_qubits) if q not in keep]
+    batch_shape = rho.shape[:-2]
+    t = rho.reshape(batch_shape + _qubit_axes(n_qubits) * 2)
+    nb = len(batch_shape)
+    # Sum over traced row/col axis pairs, starting from the largest index
+    # so earlier axis positions stay valid.
+    for q in sorted(traced, reverse=True):
+        t = jnp.trace(t, axis1=nb + q, axis2=nb + q + (t.ndim - nb) // 2)
+    d = dim(len(keep))
+    out = t.reshape(batch_shape + (d, d))
+    if keep != sorted(keep):
+        # permute kept qubits into requested order
+        srt = sorted(keep)
+        perm = [srt.index(q) for q in keep]
+        tt = out.reshape(batch_shape + _qubit_axes(len(keep)) * 2)
+        k = len(keep)
+        tt = jnp.transpose(
+            tt,
+            list(range(nb))
+            + [nb + p for p in perm]
+            + [nb + k + p for p in perm],
+        )
+        out = tt.reshape(batch_shape + (d, d))
+    return out
+
+
+def haar_state(key: jax.Array, n_qubits: int, batch: tuple = (),
+               dtype=None) -> jax.Array:
+    """Haar-random pure state vector(s) of shape batch + (2**n,)."""
+    kr, ki = jax.random.split(key)
+    shape = batch + (dim(n_qubits),)
+    re = jax.random.normal(kr, shape)
+    im = jax.random.normal(ki, shape)
+    psi = (re + 1j * im).astype(_resolve(dtype))
+    norm = jnp.sqrt(jnp.sum(jnp.abs(psi) ** 2, axis=-1, keepdims=True))
+    return psi / norm
+
+
+def haar_unitary(key: jax.Array, d: int, batch: tuple = (),
+                 dtype=None) -> jax.Array:
+    """Haar-random unitary via QR decomposition of a Ginibre matrix."""
+    kr, ki = jax.random.split(key)
+    shape = batch + (d, d)
+    z = (jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape))
+    z = z.astype(_resolve(dtype)) / jnp.sqrt(2.0)
+    q, r = jnp.linalg.qr(z)
+    # Fix the phase ambiguity so the distribution is Haar.
+    diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+    ph = diag / jnp.abs(diag)
+    return q * ph[..., None, :]
+
+
+def expm_herm(k: jax.Array, scale) -> jax.Array:
+    """e^{i * scale * K} for Hermitian K via eigendecomposition.
+
+    Eigendecomposition is differentiable-enough for our use (we never
+    differentiate through it — Prop. 1 gives closed-form updates) and is
+    more robust than Padé expm for complex Hermitian inputs.
+    """
+    w, v = jnp.linalg.eigh(k)
+    phase = jnp.exp(1j * scale * w.astype(k.dtype))
+    return jnp.einsum("...ab,...b,...cb->...ac", v, phase, jnp.conjugate(v))
+
+
+def fidelity_pure(phi: jax.Array, rho: jax.Array) -> jax.Array:
+    """<phi| rho |phi> for pure label phi (batched over leading axes)."""
+    return jnp.real(jnp.einsum("...a,...ab,...b->...", jnp.conjugate(phi), rho, phi))
+
+
+def mse_state(phi: jax.Array, rho: jax.Array) -> jax.Array:
+    """|| rho - |phi><phi| ||_F^2 (Eq. 10)."""
+    diff = rho - pure_density(phi)
+    return jnp.real(jnp.sum(jnp.abs(diff) ** 2, axis=(-2, -1)))
+
+
+def is_unitary(u: jax.Array, atol: float = 1e-8) -> jax.Array:
+    eye = jnp.eye(u.shape[-1], dtype=u.dtype)
+    return jnp.max(jnp.abs(u @ dagger(u) - eye)) < atol
+
+
+def is_hermitian(k: jax.Array, atol: float = 1e-8) -> jax.Array:
+    return jnp.max(jnp.abs(k - dagger(k))) < atol
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def trace_norm_check(rho: jax.Array, n_qubits: int) -> jax.Array:
+    del n_qubits
+    return jnp.real(jnp.trace(rho, axis1=-2, axis2=-1))

@@ -1,0 +1,216 @@
+"""Dissipative quantum neural network (Beer et al. 2020) in pure JAX.
+
+This is the model QuantumFed (§II-B, Eq. 1-2) trains. A network is a
+tuple of layer widths ``(m_0, m_1, ..., m_L)``. Layer ``l`` owns ``m_l``
+perceptron unitaries ``U^{l,j}`` of dimension ``2**(m_{l-1}+1)`` acting
+on all ``m_{l-1}`` input qubits plus output qubit ``j``. The layer
+channel is
+
+    E^l(rho) = tr_{l-1}( U^l (rho ⊗ |0..0><0..0|) U^l† ),
+    U^l = U^{l,m_l} ... U^{l,1}            (U^{l,1} applied first)
+
+Parameters are a list (one per layer) of stacked unitaries with shape
+``(m_l, 2**(m_{l-1}+1), 2**(m_{l-1}+1))``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantum import linalg as ql
+
+Params = List[jax.Array]
+
+
+def perceptron_dim(m_in: int) -> int:
+    return ql.dim(m_in + 1)
+
+
+def init_params(key: jax.Array, widths: Sequence[int],
+                dtype=ql.DEFAULT_DTYPE) -> Params:
+    """Random (Haar) initialization of all perceptron unitaries (Alg. 2
+    step 1)."""
+    params = []
+    keys = jax.random.split(key, len(widths) - 1)
+    for l in range(1, len(widths)):
+        m_in, m_out = widths[l - 1], widths[l]
+        d = perceptron_dim(m_in)
+        params.append(ql.haar_unitary(keys[l - 1], d, batch=(m_out,), dtype=dtype))
+    return params
+
+
+def _embedded_perceptrons(us: jax.Array, m_in: int, m_out: int) -> jax.Array:
+    """Embed each U^{l,j} into the full (m_in + m_out)-qubit space.
+
+    Returns a stacked array (m_out, D, D), D = 2**(m_in+m_out).
+    """
+    n = m_in + m_out
+    embedded = []
+    for j in range(m_out):
+        acting = list(range(m_in)) + [m_in + j]
+        embedded.append(ql.embed_unitary(us[j], acting, n))
+    return jnp.stack(embedded)
+
+
+def layer_forward(us: jax.Array, rho_in: jax.Array, m_in: int, m_out: int
+                  ) -> jax.Array:
+    """Apply the layer channel E^l to a (batched) density matrix."""
+    n = m_in + m_out
+    p0 = ql.zero_projector(m_out, dtype=rho_in.dtype)
+    full = jnp.einsum("...ab,cd->...acbd", rho_in, p0)
+    d = ql.dim(n)
+    full = full.reshape(rho_in.shape[:-2] + (d, d))
+    for u in _embedded_perceptrons(us, m_in, m_out):
+        full = ql.apply_unitary(full, u)
+    return ql.partial_trace(full, keep=list(range(m_in, n)), n_qubits=n)
+
+
+def layer_adjoint(us: jax.Array, sigma: jax.Array, m_in: int, m_out: int
+                  ) -> jax.Array:
+    """Adjoint channel F^l: back-propagate sigma^l -> sigma^{l-1}.
+
+    F(Y) = (I ⊗ <0..0|) U† (I ⊗ Y) U (I ⊗ |0..0>)
+    """
+    n = m_in + m_out
+    d_in, d_out = ql.dim(m_in), ql.dim(m_out)
+    # (I_in ⊗ Y) in full space
+    eye_in = jnp.eye(d_in, dtype=sigma.dtype)
+    full = jnp.einsum("ab,...cd->...acbd", eye_in, sigma)
+    full = full.reshape(sigma.shape[:-2] + (d_in * d_out, d_in * d_out))
+    embedded = _embedded_perceptrons(us, m_in, m_out)
+    # U = U_m ... U_1  =>  U† (·) U applied as successive sandwiches,
+    # outermost factor first: U† X U = U_1† ... U_m† X U_m ... U_1.
+    for u in embedded[::-1]:
+        full = ql.apply_unitary(full, ql.dagger(u))
+    # Sandwich with (I ⊗ |0..0>): select the out-block 0,0.
+    t = full.reshape(sigma.shape[:-2] + (d_in, d_out, d_in, d_out))
+    return t[..., :, 0, :, 0]
+
+
+def feedforward(params: Params, rho_in: jax.Array, widths: Sequence[int]
+                ) -> List[jax.Array]:
+    """Return [rho^0, rho^1, ..., rho^L] (Eq. 2), batched."""
+    rhos = [rho_in]
+    for l in range(1, len(widths)):
+        rhos.append(layer_forward(params[l - 1], rhos[-1],
+                                  widths[l - 1], widths[l]))
+    return rhos
+
+
+def backward(params: Params, sigma_out: jax.Array, widths: Sequence[int]
+             ) -> List[jax.Array]:
+    """Return [sigma^0, ..., sigma^L] with sigma^L = label density."""
+    L = len(widths) - 1
+    sigmas = [sigma_out]
+    for l in range(L, 0, -1):
+        sigmas.append(layer_adjoint(params[l - 1], sigmas[-1],
+                                    widths[l - 1], widths[l]))
+    return sigmas[::-1]
+
+
+def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
+                    widths: Sequence[int], eta: float) -> Params:
+    """Proposition 1: closed-form Hermitian update matrices K^{l,j}.
+
+        K_j^l = eta * 2^{m_{l-1}} * i / N * sum_x tr_rest M_x^{l,j}
+        M_x^{l,j} = [ A_x^{l,j}, B_x^{l,j} ]
+
+    where A is the partially-applied forward state and B the partially
+    back-propagated label, both in the (m_{l-1}+m_l)-qubit layer space.
+
+    phi_in:  (N, 2**m_0) pure input states
+    phi_out: (N, 2**m_L) pure label states
+    Returns a list like params of stacked K's (m_l, d, d).
+    """
+    n_data = phi_in.shape[0]
+    rho_in = ql.pure_density(phi_in)
+    sigma_l = ql.pure_density(phi_out)
+    rhos = feedforward(params, rho_in, widths)
+    sigmas = backward(params, sigma_l, widths)
+
+    ks: Params = []
+    for l in range(1, len(widths)):
+        m_in, m_out = widths[l - 1], widths[l]
+        n = m_in + m_out
+        d_full = ql.dim(n)
+        embedded = _embedded_perceptrons(params[l - 1], m_in, m_out)
+
+        # A_0 = rho^{l-1} ⊗ |0..0><0..0|
+        p0 = ql.zero_projector(m_out, dtype=rho_in.dtype)
+        a = jnp.einsum("...ab,cd->...acbd", rhos[l - 1], p0)
+        a = a.reshape(rhos[l - 1].shape[:-2] + (d_full, d_full))
+        # B_{m_out} = I_{in} ⊗ sigma^l ; build then peel U's downward.
+        eye_in = jnp.eye(ql.dim(m_in), dtype=rho_in.dtype)
+        b = jnp.einsum("ab,...cd->...acbd", eye_in, sigmas[l])
+        b = b.reshape(sigmas[l].shape[:-2] + (d_full, d_full))
+        # Pre-compute B_j for j = m_out..1:
+        #   B_j = U_{j+1}† ... U_m† (I⊗sigma) U_m ... U_{j+1}
+        bs = [b]  # index: bs[0] corresponds to j = m_out
+        for jj in range(m_out - 1, 0, -1):
+            b = ql.apply_unitary(b, ql.dagger(embedded[jj]))
+            bs.append(b)
+        bs = bs[::-1]  # bs[j-1] is B_j
+
+        layer_ks = []
+        for j in range(m_out):
+            # A_j = U_j ... U_1 (rho ⊗ P0) U_1† ... U_j†
+            a = ql.apply_unitary(a, embedded[j])
+            m = a @ bs[j] - bs[j] @ a  # commutator [A_j, B_j]
+            keep = list(range(m_in)) + [m_in + j]
+            m_traced = ql.partial_trace(m, keep=keep, n_qubits=n)
+            k = (eta * (2.0 ** m_in) * 1j / n_data) * jnp.sum(m_traced, axis=0)
+            layer_ks.append(k)
+        ks.append(jnp.stack(layer_ks))
+    return ks
+
+
+def apply_updates(params: Params, ks: Params, eps: float) -> Params:
+    """Temporary update step: U^{l,j} <- e^{i eps K_j^l} U^{l,j}."""
+    new_params = []
+    for us, k in zip(params, ks):
+        upd = ql.expm_herm(k, eps)
+        new_params.append(jnp.einsum("jab,jbc->jac", upd, us))
+    return new_params
+
+
+def update_unitaries(ks: Params, scale: float) -> Params:
+    """The unitaries a node uploads: U_{n,k}^{l,j} = e^{i eps (N_n/N_t) K}."""
+    return [ql.expm_herm(k, scale) for k in ks]
+
+
+def apply_unitary_updates(params: Params, updates: Params) -> Params:
+    """Left-multiply stacked per-perceptron unitaries onto the params."""
+    return [jnp.einsum("jab,jbc->jac", u, p) for u, p in zip(updates, params)]
+
+
+def outputs(params: Params, phi_in: jax.Array, widths: Sequence[int]
+            ) -> jax.Array:
+    """rho^out for a batch of pure input states."""
+    rho_in = ql.pure_density(phi_in)
+    return feedforward(params, rho_in, widths)[-1]
+
+
+def cost_fidelity(params: Params, phi_in: jax.Array, phi_out: jax.Array,
+                  widths: Sequence[int]) -> jax.Array:
+    """Eq. 3: mean fidelity <phi_out| rho_out |phi_out> over the batch."""
+    rho_out = outputs(params, phi_in, widths)
+    return jnp.mean(ql.fidelity_pure(phi_out, rho_out))
+
+
+def cost_mse(params: Params, phi_in: jax.Array, phi_out: jax.Array,
+             widths: Sequence[int]) -> jax.Array:
+    """Eq. 10: mean squared (Frobenius) error."""
+    rho_out = outputs(params, phi_in, widths)
+    return jnp.mean(ql.mse_state(phi_out, rho_out))
+
+
+@functools.partial(jax.jit, static_argnames=("widths", "eta", "eps"))
+def local_step(params: Params, phi_in: jax.Array, phi_out: jax.Array,
+               widths: Tuple[int, ...], eta: float, eps: float
+               ) -> Tuple[Params, Params]:
+    """One QuanFedNode temporary-update step. Returns (new_params, Ks)."""
+    ks = update_matrices(params, phi_in, phi_out, widths, eta)
+    return apply_updates(params, ks, eps), ks

@@ -1,0 +1,2 @@
+from repro.data.partition import partition_iid, partition_non_iid  # noqa: F401
+from repro.data.synthetic import BigramTask, token_batches  # noqa: F401

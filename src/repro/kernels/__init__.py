@@ -1,0 +1,2 @@
+"""Pallas TPU kernels (+ ops wrappers and jnp oracles)."""
+from repro.kernels import ops, ref  # noqa: F401

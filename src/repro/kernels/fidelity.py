@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: batched pure-state fidelity <phi| rho |phi>
+(Eq. 3's inner loop over the evaluation set).
+
+One grid step evaluates a block of states: quadratic form via two MXU
+matmuls on the real/imag split (rho Hermitian => result real):
+
+  Re<phi|rho|phi> = phr^T (Rr phr - Ri phi_i) + phi_i^T (Rr phi_i + Ri phr)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fidelity_kernel(pr_ref, pi_ref, rr_ref, ri_ref, o_ref):
+    pr = pr_ref[...].astype(jnp.float32)      # (blk, d)
+    pi = pi_ref[...].astype(jnp.float32)
+    rr = rr_ref[...].astype(jnp.float32)      # (blk, d, d)
+    ri = ri_ref[...].astype(jnp.float32)
+    # y = rho @ phi  (real/imag parts), batched matvec via einsum
+    yr = jnp.einsum("bde,be->bd", rr, pr) - jnp.einsum("bde,be->bd", ri, pi)
+    yi = jnp.einsum("bde,be->bd", rr, pi) + jnp.einsum("bde,be->bd", ri, pr)
+    o_ref[...] = (jnp.sum(pr * yr, axis=-1)
+                  + jnp.sum(pi * yi, axis=-1)).astype(o_ref.dtype)
+
+
+def fidelity_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """phi: (N, d) complex; rho: (N, d, d) complex. Returns (N,) real."""
+    n, d = phi.shape
+    p = (-n) % block
+    pr, pi = jnp.real(phi), jnp.imag(phi)
+    rr, ri = jnp.real(rho), jnp.imag(rho)
+    if p:
+        pr = jnp.pad(pr, ((0, p), (0, 0)))
+        pi = jnp.pad(pi, ((0, p), (0, 0)))
+        rr = jnp.pad(rr, ((0, p), (0, 0), (0, 0)))
+        ri = jnp.pad(ri, ((0, p), (0, 0), (0, 0)))
+    grid = ((n + p) // block,)
+    out = pl.pallas_call(
+        _fidelity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block, d, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, d, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + p,), pr.dtype),
+        interpret=interpret,
+    )(pr, pi, rr, ri)
+    return out[:n]

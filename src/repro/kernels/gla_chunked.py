@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: chunked gated linear attention (RWKV6 wkv).
+
+TARGET: TPU v5e. One grid step owns one (batch, head) pair; the kernel
+fori-loops over sequence chunks, keeping the (head_dim x head_dim)
+recurrent state in VMEM scratch for the whole sequence — the state never
+round-trips to HBM (the XLA reference carries it through a lax.scan,
+i.e. HBM-resident). Chunk tiles (chunk x head_dim) stream through VMEM.
+
+Per chunk (local cumulative log-decay lp, exclusive lp_prev):
+  intra[t]  = sum_{i<t} (r_t . (k_i * exp(lp_prev_t - lp_i))) v_i
+              + (r_t . k_t u) v_t                (pairwise exponents <= 0)
+  inter[t]  = (r_t * exp(lp_prev_t)) @ S
+  S        <- exp(lp_last) * S + sum_i (k_i * exp(lp_last - lp_i)) v_i
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+                chunk: int, seq: int):
+    n_chunks = seq // chunk
+    dh = r_ref.shape[-1]
+
+    state_ref[...] = jnp.zeros_like(state_ref)
+    u = u_ref[0].astype(jnp.float32)                       # (dh,)
+
+    def body(n, _):
+        sl = pl.dslice(n * chunk, chunk)
+        r = r_ref[0, sl, :].astype(jnp.float32)            # (c, dh)
+        k = k_ref[0, sl, :].astype(jnp.float32)
+        v = v_ref[0, sl, :].astype(jnp.float32)
+        w = w_ref[0, sl, :].astype(jnp.float32)
+
+        logw = jnp.log(jnp.maximum(w, 1e-20))
+        lp = jnp.cumsum(logw, axis=0)                      # inclusive
+        lp_prev = lp - logw                                # exclusive
+
+        # pairwise decayed intra-chunk attention (exponents <= 0)
+        pair = lp_prev[:, None, :] - lp[None, :, :]        # (c, c, dh)
+        tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) > \
+            jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        dec = jnp.where(tri[:, :, None], jnp.exp(pair), 0.0)
+        a = jnp.einsum("tc,ic,tic->ti", r, k, dec)         # (c, c)
+        intra = jax.lax.dot_general(a, v, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        bonus = jnp.sum(r * k * u[None, :], axis=-1)[:, None] * v
+
+        # inter-chunk from the VMEM-resident state
+        q_dec = r * jnp.exp(lp_prev)
+        inter = jax.lax.dot_general(q_dec, state_ref[...],
+                                    (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+        o_ref[0, sl, :] = (intra + bonus + inter).astype(o_ref.dtype)
+
+        # state update
+        lp_last = lp[-1]                                   # (dh,)
+        k_dec = k * jnp.exp(lp_last[None, :] - lp)
+        kv = jax.lax.dot_general(k_dec, v, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        state_ref[...] = jnp.exp(lp_last)[:, None] * state_ref[...] + kv
+        return ()
+
+    jax.lax.fori_loop(0, n_chunks, body, ())
+
+
+def gla_chunked(r, k, v, w, u, *, chunk: int = 16,
+                interpret: bool = False):
+    """r,k,v,w: (B, S, H, dh); u: (H, dh). Returns out (B, S, H, dh).
+
+    Grid over (B*H,); per-grid-step sequential chunk loop with VMEM
+    state (the TPU-native layout for a recurrent scan)."""
+    b, s, h, dh = r.shape
+    assert s % chunk == 0, (s, chunk)
+
+    def to_bh(x):
+        return jnp.moveaxis(x, 2, 1).reshape(b * h, s, dh)
+
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    ub = jnp.broadcast_to(u[None], (b, h, dh)).reshape(b * h, dh)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk, seq=s)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h,),
+        in_specs=[
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dh), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, wb, ub)
+    return jnp.moveaxis(out.reshape(b, h, s, dh), 1, 2)

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`impl="pallas"` targets TPU (interpret=True used on CPU for validation);
+`impl="xla"` dispatches to the pure-jnp reference — the default on this
+CPU container and what the models use unless cfg selects kernels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.fidelity import fidelity_batch
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gla_chunked import gla_chunked
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.zgemm import zgemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              impl: str = "auto"):
+    """GQA-agnostic fused attention: q (B, Sq, H, dh), k/v (B, Sk, K, dh)
+    with H = K*G (kv heads repeated here for the kernel)."""
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, dh)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, dh)
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        out = flash_attention(qf, kf, vf, causal=causal, window=window,
+                              interpret=not _on_tpu())
+    else:
+        out = ref.attention_ref(qf, kf, vf, causal=causal, window=window)
+    return out.reshape(b, h, sq, dh).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv(r, k, v, w, u, *, chunk: int = 16, impl: str = "auto"):
+    """RWKV6 linear attention: r,k,v,w (B,S,H,dh), u (H,dh)."""
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        return gla_chunked(r, k, v, w, u, chunk=chunk,
+                           interpret=not _on_tpu())
+    return ref.gla_recurrence_ref(r, k, v, w, u)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def complex_matmul(a, b, *, impl: str = "auto"):
+    """Batched complex matmul a @ b, (B,M,K) x (B,K,N) complex."""
+    ar, ai = jnp.real(a), jnp.imag(a)
+    br, bi = jnp.real(b), jnp.imag(b)
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        cr, ci = zgemm(ar, ai, br, bi, interpret=not _on_tpu())
+    else:
+        cr, ci = ref.zgemm_ref(ar, ai, br, bi)
+    return (cr + 1j * ci).astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def fidelity(phi, rho, *, impl: str = "auto"):
+    """Batched pure-state fidelity <phi|rho|phi> -> (N,) real."""
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        return fidelity_batch(phi, rho, interpret=not _on_tpu())
+    return ref.fidelity_ref(phi, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def lru_scan(a, b, *, impl: str = "auto"):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + b_t (RG-LRU)."""
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        return rglru_scan(a, b, interpret=not _on_tpu())
+    return ref.rglru_scan_ref(a, b)

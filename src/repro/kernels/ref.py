@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+shape/dtype sweeps in tests/test_kernels_*.py assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0
+                  ) -> jax.Array:
+    """q: (BH, Sq, dh); k/v: (BH, Sk, dh). fp32 softmax."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    qp = jnp.arange(q.shape[1])[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(s, bool)
+    if causal:
+        mask &= kp <= qp
+    if window > 0:
+        mask &= kp > qp - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def gla_recurrence_ref(r, k, v, w, u) -> jax.Array:
+    """Naive step-by-step RWKV6 recurrence (the definitional oracle).
+
+    r,k,v,w: (B, S, H, dh); u: (H, dh). fp32 state.
+        out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t   = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, s, h, dh = r.shape
+    f32 = jnp.float32
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,dh,dh)
+        out = jnp.einsum("bhc,bhce->bhe", rt,
+                         state + u.astype(f32)[..., None] * kv)
+        state = wt[..., None] * state + kv
+        return state, out
+
+    xs = tuple(jnp.moveaxis(a.astype(f32), 1, 0) for a in (r, k, v, w))
+    state0 = jnp.zeros((b, h, dh, dh), f32)
+    _, outs = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype)
+
+
+def zgemm_ref(ar, ai, br, bi):
+    """Batched complex matmul on split parts, fp32 accumulation."""
+    f32 = jnp.float32
+    ar, ai, br, bi = (x.astype(f32) for x in (ar, ai, br, bi))
+    cr = jnp.einsum("bmk,bkn->bmn", ar, br) - jnp.einsum(
+        "bmk,bkn->bmn", ai, bi)
+    ci = jnp.einsum("bmk,bkn->bmn", ar, bi) + jnp.einsum(
+        "bmk,bkn->bmn", ai, br)
+    return cr, ci
+
+
+def fidelity_ref(phi, rho) -> jax.Array:
+    """<phi| rho |phi> batched; returns the real part."""
+    return jnp.real(jnp.einsum("na,nab,nb->n", jnp.conjugate(phi), rho,
+                               phi))
+
+
+def rglru_scan_ref(a, b) -> "jax.Array":
+    """Sequential diagonal recurrence h_t = a_t h_{t-1} + b_t, fp32."""
+    f32 = jnp.float32
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    xs = (jnp.moveaxis(a.astype(f32), 1, 0),
+          jnp.moveaxis(b.astype(f32), 1, 0))
+    h0 = jnp.zeros(a.shape[:1] + a.shape[2:], f32)
+    _, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype)

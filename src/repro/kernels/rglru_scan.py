@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: RG-LRU diagonal linear recurrence.
+
+TARGET: TPU v5e. The recurrence h_t = a_t * h_{t-1} + b_t is diagonal
+per channel, so one grid step owns one batch row and a block of
+channels; the kernel fori-loops over sequence chunks with the running
+hidden state resident in VMEM (HBM sees each input/output element once,
+vs log-depth re-materialization for the XLA associative scan).
+
+Used by the recurrentgemma-2b blocks when kernels="pallas"; the model's
+default XLA path (jax.lax.associative_scan) doubles as the oracle's
+cross-check and the ref oracle is the plain sequential scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, chunk: int, seq: int):
+    n_chunks = seq // chunk
+    h_ref[...] = jnp.zeros_like(h_ref)
+
+    def body(n, _):
+        sl = pl.dslice(n * chunk, chunk)
+        a = a_ref[0, sl, :].astype(jnp.float32)   # (c, d)
+        b = b_ref[0, sl, :].astype(jnp.float32)
+        h = h_ref[...]                            # (d,)
+
+        # within-chunk: cumulative products of a give each step's
+        # dependence on the chunk-entry state; pairwise-free formulation
+        # via an in-chunk sequential fori (chunk is small, VMEM-resident)
+        def step(t, carry):
+            h_t = a[t] * carry + b[t]
+            o_ref[0, n * chunk + t, :] = h_t.astype(o_ref.dtype)
+            return h_t
+
+        h = jax.lax.fori_loop(0, chunk, step, h)
+        h_ref[...] = h
+        return ()
+
+    jax.lax.fori_loop(0, n_chunks, body, ())
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, *, chunk: int = 64,
+               interpret: bool = False) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t with h_0 = 0.
+
+    a, b: (B, S, D). Returns h: (B, S, D). D blocked at 128 lanes.
+    """
+    bsz, s, d = a.shape
+    assert s % chunk == 0 or s < chunk, (s, chunk)
+    chunk = min(chunk, s)
+    out = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=chunk, seq=s),
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, s, d), a.dtype),
+        scratch_shapes=[pltpu.VMEM((d,), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out

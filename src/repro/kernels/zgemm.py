@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: complex GEMM via real/imag split (the QuantumFed
+hot spot).
+
+HARDWARE ADAPTATION (DESIGN.md §2): the density-matrix simulator's inner
+loop is batched complex matmul (U rho U†, adjoint channels, expm
+sandwiches). The TPU MXU is a REAL 128x128 systolic array with no
+complex support, so a complex GEMM decomposes into four real matmuls per
+tile pair:
+
+    Cr = Ar Br - Ai Bi,   Ci = Ar Bi + Ai Br
+
+The kernel tiles (bm x bk)x(bk x bn) through VMEM with an fp32
+accumulator pair, accumulating over the k grid axis (TPU sequential
+minor grid dim). Batched over the leading axis (dataset x perceptron).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _zgemm_kernel(ar_ref, ai_ref, br_ref, bi_ref, cr_ref, ci_ref,
+                  acc_r, acc_i):
+    kk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_r[...] = jnp.zeros_like(acc_r)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    ar = ar_ref[0].astype(jnp.float32)
+    ai = ai_ref[0].astype(jnp.float32)
+    br = br_ref[0].astype(jnp.float32)
+    bi = bi_ref[0].astype(jnp.float32)
+    dn = (((1,), (0,)), ((), ()))
+    dot = functools.partial(jax.lax.dot_general, dimension_numbers=dn,
+                            preferred_element_type=jnp.float32)
+    acc_r[...] += dot(ar, br) - dot(ai, bi)
+    acc_i[...] += dot(ar, bi) + dot(ai, br)
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        cr_ref[0] = acc_r[...].astype(cr_ref.dtype)
+        ci_ref[0] = acc_i[...].astype(ci_ref.dtype)
+
+
+def zgemm(ar, ai, br, bi, *, block_m: int = 128, block_n: int = 128,
+          block_k: int = 128, interpret: bool = False):
+    """Batched complex GEMM on split real/imag parts.
+
+    ar, ai: (B, M, K) float; br, bi: (B, K, N) float.
+    Returns (cr, ci): (B, M, N).
+    """
+    b, m, k = ar.shape
+    n = br.shape[-1]
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+
+    def pad(x, mult, axis):
+        p = (-x.shape[axis]) % mult
+        if p == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(x, widths)
+
+    ar, ai = pad(pad(ar, bm, 1), bk, 2), pad(pad(ai, bm, 1), bk, 2)
+    br, bi = pad(pad(br, bk, 1), bn, 2), pad(pad(bi, bk, 1), bn, 2)
+    mp, kp, np_ = ar.shape[1], ar.shape[2], br.shape[2]
+
+    grid = (b, mp // bm, np_ // bn, kp // bk)
+    out_shape = [jax.ShapeDtypeStruct((b, mp, np_), ar.dtype)] * 2
+    cr, ci = pl.pallas_call(
+        _zgemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+            pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        ],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)] * 2,
+        interpret=interpret,
+    )(ar, ai, br, bi)
+    return cr[:, :m, :n], ci[:, :m, :n]
+
+
+def zgemm_complex(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """Convenience wrapper on complex inputs (split/recombine)."""
+    cr, ci = zgemm(jnp.real(a), jnp.imag(a), jnp.real(b), jnp.imag(b),
+                   **kw)
+    return cr + 1j * ci

@@ -1,0 +1,172 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input shape) combination, lower + compile the
+appropriate step (train_step / prefill / serve_step) against the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — with
+ShapeDtypeStruct inputs (no allocation), and record:
+
+  * memory_analysis (per-device bytes: args/outputs/temps) — fits check
+  * cost_analysis (per-device FLOPs/bytes; NOTE: XLA does not multiply
+    while-loop bodies, so §Roofline uses repro.roofline.hlo_parse which
+    applies known_trip_count multipliers)
+  * parsed collective bytes / op counts / loop-aware dot FLOPs
+
+Results go to experiments/dryrun/<arch>__<shape>__<mesh>.json, one file
+per combo (resumable; --force recomputes). --all runs each combo in a
+subprocess so one pathological compile cannot take down the sweep.
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import (REGISTRY, get_config, supports_shape,
+                           variant_for_shape)
+from repro.models.config import INPUT_SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import artifacts_for
+from repro.roofline.hlo_parse import parse_hlo
+
+OUT_DIR = "experiments/dryrun"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            out_dir: str = OUT_DIR, save_hlo: bool = False) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    base = get_config(arch)
+    if not supports_shape(base, shape):
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "status": "skipped",
+               "reason": "full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md)"}
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    cfg = variant_for_shape(base, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        step, args = artifacts_for(cfg, shape, mesh)
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+    print(mem)
+    print({k: v for k, v in cost.items() if "utilization" not in k})
+    parsed = parse_hlo(hlo_text, mesh_shape=dict(mesh.shape))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_devices": mesh.size,
+        "mesh_shape": dict(mesh.shape),
+        "seconds": {"lower": round(t_lower, 1),
+                    "compile": round(t_compile, 1)},
+        "memory_analysis": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                         + mem.output_size_in_bytes
+                                         + mem.temp_size_in_bytes
+                                         - mem.alias_size_in_bytes),
+        },
+        "cost_analysis": {k: float(v) for k, v in cost.items()
+                          if k in ("flops", "bytes accessed",
+                                   "transcendentals")},
+        "hlo": parsed,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(out_dir, fname[:-5] + ".hlo.txt"), "w") as f:
+            f.write(hlo_text)
+    return rec
+
+
+def combo_done(arch, shape_name, mesh_name, out_dir=OUT_DIR):
+    return os.path.exists(
+        os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input-shape id or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--inline", action="store_true",
+                    help="run combos in-process (default: subprocesses)")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(REGISTRY) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    combos = [(a, s, m) for a in archs for s in shapes for m in meshes]
+    single_combo = len(combos) == 1
+
+    failures = []
+    for arch, shape_name, mesh_name in combos:
+        if not args.force and combo_done(arch, shape_name, mesh_name,
+                                         args.out):
+            print(f"[skip] {arch} {shape_name} {mesh_name} (done)")
+            continue
+        tag = f"{arch} {shape_name} {mesh_name}"
+        if single_combo or args.inline:
+            try:
+                rec = run_one(arch, shape_name, mesh_name == "multi",
+                              args.out, args.save_hlo)
+                print(f"[{rec['status']}] {tag}")
+            except Exception:
+                traceback.print_exc()
+                failures.append(tag)
+        else:
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape_name,
+                   "--mesh", mesh_name, "--out", args.out]
+            if args.force:
+                cmd.append("--force")
+            if args.save_hlo:
+                cmd.append("--save-hlo")
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            ok = r.returncode == 0
+            print(f"[{'ok' if ok else 'FAIL'}] {tag} "
+                  f"({time.time() - t0:.0f}s)")
+            if not ok:
+                print(r.stdout[-2000:])
+                print(r.stderr[-4000:])
+                failures.append(tag)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import (see dryrun.py).
+
+"""Federated multi-pod dry-run — the paper's technique at production
+scale (QuanFedPS with pods as nodes).
+
+Lowers one full `fed_train_round` (I_l local AdamW steps per pod +
+data-volume-weighted cross-pod delta aggregation) on the 2x16x16 mesh
+and reports collective bytes split BY MESH AXIS. The paper's §III-D.2
+claim — interval length amortizes synchronization — becomes directly
+measurable: cross-'pod' bytes per local step must fall ~1/I_l while
+in-pod ('data'/'model') bytes per local step stay constant.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_fed --arch qwen1.5-4b \
+        --intervals 1,4
+"""
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.fed import FederatedConfig, fed_train_round
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import batch_shardings, param_shardings
+from repro.models import Model
+from repro.models.config import INPUT_SHAPES
+from repro.optim import AdamW
+from repro.roofline.hlo_parse import parse_hlo
+from repro.sharding.rules import rule_overrides, spec_for
+
+OUT_DIR = "experiments/dryrun_fed"
+
+
+def run(arch: str, interval: int, shape_name: str = "train_4k",
+        save_hlo: bool = False, delta_dtype: str = "float32") -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = mesh.shape["pod"]
+    model = Model(cfg)
+    opt = AdamW(state_dtype=cfg.opt_state_dtype)
+    fed_cfg = FederatedConfig(num_nodes=n_pods, nodes_per_round=n_pods,
+                              interval_length=interval,
+                              delta_dtype=delta_dtype)
+
+    # Fed mode: params replicated ACROSS pods (each pod trains locally),
+    # FSDP over 'data' only — hence the embed-rule override.
+    with rule_overrides(embed="data", act_batch="data"):
+        with mesh:
+            p_specs, p_shard = param_shardings(model, mesh)
+            o_specs = opt.init_abstract(p_specs)
+
+            # node-indexed opt states: leading pod axis; m/v additionally
+            # inherit the params' in-pod FSDP via XLA propagation
+            o_nodes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_pods,) + s.shape,
+                                               s.dtype), o_specs)
+            o_nodes_shard = jax.tree.map(
+                lambda s: NamedSharding(mesh, P("pod")), o_nodes)
+            b_local = shape.global_batch // n_pods
+            batch_local = {
+                "tokens": jax.ShapeDtypeStruct(
+                    (n_pods, interval, b_local, shape.seq_len),
+                    jnp.int32),
+                "labels": jax.ShapeDtypeStruct(
+                    (n_pods, interval, b_local, shape.seq_len),
+                    jnp.int32),
+            }
+            nb_shard = {k: NamedSharding(mesh, P("pod", None, "data"))
+                        for k in batch_local}
+            lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+            loss_fn = lambda p, b: model.loss_fn(p, b)
+
+            def fed_round(params, opt_nodes, node_batches, lr):
+                return fed_train_round(loss_fn, opt, params, opt_nodes,
+                                       node_batches, lr, fed_cfg)
+
+            step = jax.jit(
+                fed_round,
+                in_shardings=(p_shard, o_nodes_shard, nb_shard,
+                              NamedSharding(mesh, P())),
+                out_shardings=(p_shard, o_nodes_shard, None),
+                donate_argnums=(0, 1))
+            t0 = time.time()
+            lowered = step.lower(p_specs, o_nodes, batch_local, lr)
+            compiled = lowered.compile()
+            secs = time.time() - t0
+            mem = compiled.memory_analysis()
+            hlo = compiled.as_text()
+
+    parsed = parse_hlo(hlo, mesh_shape=dict(mesh.shape))
+    by_axis = parsed.get("collective_bytes_by_axis", {})
+    cross_pod = sum(v for k, v in by_axis.items() if "pod" in k)
+    in_pod = sum(v for k, v in by_axis.items() if "pod" not in k)
+    rec = {
+        "arch": arch, "shape": shape_name, "interval_length": interval,
+        "delta_dtype": delta_dtype,
+        "mesh": "multi", "n_devices": mesh.size,
+        "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                     + mem.output_size_in_bytes
+                                     + mem.temp_size_in_bytes
+                                     - mem.alias_size_in_bytes),
+        "dot_flops": parsed["dot_flops"],
+        "collective_bytes_total": parsed["collective_bytes_total"],
+        "collective_bytes_by_axis": by_axis,
+        "cross_pod_bytes": cross_pod,
+        "cross_pod_bytes_per_local_step": cross_pod / interval,
+        "in_pod_bytes_per_local_step": in_pod / interval,
+        "compile_seconds": round(secs, 1),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    fname = f"{arch}__fed_I{interval}_{delta_dtype}.json"
+    with open(os.path.join(OUT_DIR, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(OUT_DIR, fname[:-5] + ".hlo.txt"),
+                  "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-4b")
+    ap.add_argument("--intervals", default="1,4")
+    ap.add_argument("--delta-dtype", default="float32")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+    for interval in [int(x) for x in args.intervals.split(",")]:
+        rec = run(args.arch, interval, save_hlo=args.save_hlo,
+                  delta_dtype=args.delta_dtype)
+        print(f"I_l={interval}: cross-pod {rec['cross_pod_bytes']/1e9:.2f}"
+              f" GB/round ({rec['cross_pod_bytes_per_local_step']/1e9:.2f}"
+              f" GB/local-step), in-pod "
+              f"{rec['in_pod_bytes_per_local_step']/1e9:.2f} GB/local-step,"
+              f" peak {rec['peak_bytes_per_device']/1e9:.1f} GB/dev,"
+              f" compile {rec['compile_seconds']}s")
+
+
+if __name__ == "__main__":
+    main()

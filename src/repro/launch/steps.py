@@ -1,0 +1,136 @@
+"""Jitted step builders shared by train.py / serve.py / dryrun.py.
+
+Each builder returns (jitted_fn, abstract_args, arg_shardings) so the
+dry-run can .lower(*abstract_args) and real drivers can call the same
+function with concrete arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import BATCH_AXES, batch_specs
+from repro.models import Model
+from repro.models.config import InputShape, ModelConfig
+from repro.optim import AdamW
+from repro.sharding.rules import spec_for
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(model: Model, mesh: Mesh):
+    specs, axes = model.abstract_params()
+    return specs, {k: _ns(mesh, spec_for(specs[k].shape, axes[k], mesh))
+                   for k in specs}
+
+
+def batch_shardings(batch: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh):
+    return {k: _ns(mesh, spec_for(v.shape, BATCH_AXES[k], mesh))
+            for k, v in batch.items()}
+
+
+def cache_shardings(model: Model, cache, mesh: Mesh):
+    axes = model.cache_axes()
+    return {k: _ns(mesh, spec_for(cache[k].shape, axes[k], mesh))
+            for k in cache}
+
+
+def opt_shardings(opt_state, params_shardings, mesh: Mesh):
+    """AdamW m/v mirror the param shardings; step is replicated."""
+    return type(opt_state)(
+        step=_ns(mesh, P()),
+        m={k: params_shardings[k] for k in opt_state.m},
+        v={k: params_shardings[k] for k in opt_state.v})
+
+
+# ----------------------------------------------------------------------
+# training
+# ----------------------------------------------------------------------
+
+def make_train_step(model: Model, opt: AdamW):
+    def train_step(params, opt_state, batch, lr):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(params, batch)
+        new_params, new_state = opt.update(grads, opt_state, params, lr)
+        return new_params, new_state, metrics
+    return train_step
+
+
+def train_step_artifacts(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """(jitted step, abstract args) for the dry-run."""
+    model = Model(cfg)
+    opt = AdamW(state_dtype=cfg.opt_state_dtype)
+    p_specs, p_shard = param_shardings(model, mesh)
+    o_specs = opt.init_abstract(p_specs)
+    o_shard = opt_shardings(o_specs, p_shard, mesh)
+    batch = batch_specs(cfg, shape)
+    b_shard = batch_shardings(batch, mesh)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    step = jax.jit(
+        make_train_step(model, opt),
+        in_shardings=(p_shard, o_shard, b_shard, _ns(mesh, P())),
+        out_shardings=(p_shard, o_shard, None),
+        donate_argnums=(0, 1))
+    return step, (p_specs, o_specs, batch, lr)
+
+
+# ----------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def prefill_artifacts(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    model = Model(cfg)
+    p_specs, p_shard = param_shardings(model, mesh)
+    batch = batch_specs(cfg, shape)
+    b_shard = batch_shardings(batch, mesh)
+    step = jax.jit(make_prefill_step(model),
+                   in_shardings=(p_shard, b_shard))
+    return step, (p_specs, batch)
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, batch, cur_len):
+        logits, new_cache = model.decode_step(params, batch, cache, cur_len)
+        # greedy next token (sampling handled by the server loop)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, new_cache
+    return serve_step
+
+
+def serve_step_artifacts(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    model = Model(cfg)
+    p_specs, p_shard = param_shardings(model, mesh)
+    cache = model.init_cache(shape.global_batch, shape.seq_len,
+                             abstract=True)
+    c_shard = cache_shardings(model, cache, mesh)
+    batch = batch_specs(cfg, shape)
+    b_shard = batch_shardings(batch, mesh)
+    cur = jax.ShapeDtypeStruct((), jnp.int32)
+    step = jax.jit(
+        make_serve_step(model),
+        in_shardings=(p_shard, c_shard, b_shard, _ns(mesh, P())),
+        out_shardings=(None, None, c_shard),
+        donate_argnums=(1,))
+    return step, (p_specs, cache, batch, cur)
+
+
+def artifacts_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    if shape.kind == "train":
+        return train_step_artifacts(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_artifacts(cfg, shape, mesh)
+    if shape.kind == "decode":
+        return serve_step_artifacts(cfg, shape, mesh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,105 @@
+"""End-to-end training driver.
+
+Runs on real hardware (CPU for the examples / smoke scale, TPU mesh for
+production configs): builds the model from --arch (optionally .reduced()
+via --scale smoke), streams synthetic bigram data, jit-compiles the
+train step with the production sharding rules on whatever mesh fits the
+local devices, logs loss/throughput, checkpoints, restores.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-4b \
+        --scale smoke --steps 200 --batch 16 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import token_batches
+from repro.launch.steps import (batch_shardings, make_train_step,
+                                opt_shardings, param_shardings)
+from repro.models import Model
+from repro.optim import AdamW, linear_warmup_cosine
+
+
+def build_mesh():
+    n = len(jax.devices())
+    model_axis = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model_axis = cand
+            break
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--restore", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-layers", type=int, default=0,
+                    help="override layer count (smoke scale)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.scale == "smoke":
+        over = {"n_layers": args.n_layers} if args.n_layers else {}
+        cfg = cfg.reduced(**over)
+    model = Model(cfg)
+    opt = AdamW(state_dtype=cfg.opt_state_dtype, weight_decay=0.01)
+    schedule = linear_warmup_cosine(args.lr, args.warmup, args.steps)
+
+    mesh = build_mesh()
+    print(f"arch={cfg.name} params≈{model.num_params()/1e6:.1f}M "
+          f"mesh={dict(mesh.shape)} devices={len(jax.devices())}")
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        _, p_shard = param_shardings(model, mesh)
+        params = {k: jax.device_put(v, p_shard[k])
+                  for k, v in params.items()}
+        opt_state = opt.init(params)
+        step0 = 0
+        if args.restore:
+            params, meta = ckpt.restore(args.restore, p_shard)
+            step0 = meta["step"]
+            print(f"restored step {step0} from {args.restore}")
+
+        train_step = jax.jit(make_train_step(model, opt),
+                             donate_argnums=(0, 1))
+        data = token_batches(cfg, args.batch, args.seq, seed=args.seed)
+
+        t0 = time.time()
+        tokens_done = 0
+        for step in range(step0, args.steps):
+            batch = next(data)
+            lr = schedule(step)
+            params, opt_state, metrics = train_step(params, opt_state,
+                                                    batch, lr)
+            tokens_done += args.batch * args.seq
+            if (step + 1) % args.log_every == 0 or step == step0:
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                print(f"step {step+1:5d}  loss {loss:.4f}  "
+                      f"lr {float(lr):.2e}  tok/s {tokens_done/dt:,.0f}")
+        if args.ckpt:
+            ckpt.save(args.ckpt, params, step=args.steps,
+                      extra={"arch": cfg.name})
+            print(f"saved {args.ckpt}")
+        return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

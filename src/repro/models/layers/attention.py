@@ -1,0 +1,257 @@
+"""Grouped-query attention: causal, sliding-window, cross, cached decode.
+
+Layout: q (B, S, K, G, dh) where H = K * G (K kv heads, G queries per kv
+head); k/v (B, T, K, dh). Softmax in fp32. Optional query chunking
+(`q_chunk`) bounds the score-matrix working set for long prefill — the
+XLA analogue of flash attention's row blocking (the Pallas kernel in
+`repro.kernels.flash_attention` is the TPU hot-path implementation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.embeddings import apply_mrope, apply_rope
+from repro.sharding.rules import constrain
+
+NEG_INF = -2.0e38
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fence(x, dtype_str: str):
+    """Identity whose cotangent is cast back to x's dtype. The fp32
+    softmax/score path otherwise makes dq/dk/dv fp32, which doubles
+    every downstream weight-grad all-reduce on the TPU target (§Perf
+    H-A5; unverifiable on the CPU dry-run backend, which legalizes all
+    bf16 to f32 anyway)."""
+    return x
+
+
+def _fence_fwd(x, dtype_str):
+    return x, None
+
+
+def _fence_bwd(dtype_str, _, g):
+    return (g.astype(dtype_str),)
+
+
+_fence.defvjp(_fence_fwd, _fence_bwd)
+
+
+def _grad_dtype_fence(x):
+    return _fence(x, str(x.dtype))
+
+
+def init_attention(ini, pfx: str, cfg, stack: int = 0,
+                   cross: bool = False) -> None:
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("wq", (d, h, dh), ("embed", "heads", "head_dim"))
+    mk("wk", (d, k, dh), ("embed", "kv_heads", "head_dim"))
+    mk("wv", (d, k, dh), ("embed", "kv_heads", "head_dim"))
+    mk("wo", (h, dh, d), ("heads", "head_dim", "embed"))
+    if cfg.qkv_bias and not cross:
+        mk("bq", (h, dh), ("heads", "head_dim"), init="zeros")
+        mk("bk", (k, dh), ("kv_heads", "head_dim"), init="zeros")
+        mk("bv", (k, dh), ("kv_heads", "head_dim"), init="zeros")
+
+
+def _mask(q_pos, k_pos, window: int, causal: bool, valid_len=None):
+    """Boolean (..., Sq, T) mask from query/key positions."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                 dtype=bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m &= kp <= qp
+    if window > 0:
+        m &= kp > qp - window
+    if valid_len is not None:
+        m &= kp < valid_len
+    return m
+
+
+def dot_attention(q, k, v, mask, softcap: float = 0.0):
+    """q (B,Sq,K,G,dh), k/v (B,T,K,dh), mask (B,Sq,T) or (Sq,T)."""
+    dh = q.shape[-1]
+    q = _grad_dtype_fence(q)
+    k = _grad_dtype_fence(k)
+    v = _grad_dtype_fence(v)
+    scores = jnp.einsum("bqkgd,btkd->bkgqt", q, k,
+                        preferred_element_type=jnp.float32)
+    scores *= 1.0 / jnp.sqrt(float(dh))
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def gqa_attention(q, k, v, q_pos, k_pos, *, window: int = 0,
+                  causal: bool = True, valid_len=None, q_chunk: int = 0,
+                  softcap: float = 0.0):
+    """Full attention, optionally scanning over query chunks so the
+    (Sq, T) score matrix never materializes whole."""
+    b, sq = q.shape[0], q.shape[1]
+    if q_chunk <= 0 or sq <= q_chunk or sq % q_chunk != 0:
+        mask = _mask(q_pos, k_pos, window, causal, valid_len)
+        return dot_attention(q, k, v, mask, softcap)
+
+    n_chunks = sq // q_chunk
+    qc = q.reshape((b, n_chunks, q_chunk) + q.shape[2:])
+    qpc = q_pos.reshape(q_pos.shape[:-1] + (n_chunks, q_chunk))
+
+    def body(_, xs):
+        qb, qpb = xs
+        mask = _mask(qpb, k_pos, window, causal, valid_len)
+        return None, dot_attention(qb, k, v, mask, softcap)
+
+    qc = jnp.moveaxis(qc, 1, 0)          # (n, B, qc, K, G, dh)
+    qpc = jnp.moveaxis(qpc, -2, 0)       # (n, ..., qc)
+    _, out = jax.lax.scan(body, None, (qc, qpc))
+    out = jnp.moveaxis(out, 0, 1).reshape(q.shape)
+    return out
+
+
+def self_attention(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                   positions: jax.Array, window: int = 0,
+                   cache: Optional[Dict[str, jax.Array]] = None,
+                   cur_len=None,
+                   mrope_positions: Optional[jax.Array] = None,
+                   ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self-attention with RoPE/M-RoPE and optional KV cache decode.
+
+    Train/prefill: cache is None, positions (B, S).
+    Decode: cache holds (B, S_max, K, dh) k/v; x is (B, 1, d); cur_len is
+    the scalar current length (position of the new token).
+    """
+    b, s, _ = x.shape
+    k_heads, g, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    dt = x.dtype
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dke->bske", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dke->bske", x, p["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+
+    if cfg.pos_kind == "mrope":
+        assert mrope_positions is not None
+        q = apply_mrope(q, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+        k = apply_mrope(k, mrope_positions, cfg.mrope_sections,
+                        cfg.rope_theta)
+    elif cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    from repro.sharding.rules import _current_mesh, axis_size
+    mesh = _current_mesh()
+    model_sz = axis_size(mesh, "model") if mesh is not None else 1
+    if cfg.n_heads % max(model_sz, 1) == 0 or s == 1:
+        # tensor parallelism over heads (kv falls back to head_dim when
+        # kv_heads doesn't divide — exclusive via used-axis tracking)
+        q = constrain(q, "act_batch", "act_seq", "act_heads", None)
+        # kv replicate over model when kv_heads doesn't divide: cheap
+        # (all-gather of small kv) vs head_dim-sharded score all-reduces
+        k = constrain(k, "act_batch", "act_seq", "act_kv_heads", None)
+        v = constrain(v, "act_batch", "act_seq", "act_kv_heads", None)
+    else:
+        # context parallelism: heads don't divide the model axis; shard
+        # the query sequence instead (keys/values replicated) so the
+        # score matrix partitions without partial-sum all-reduces.
+        # k/v MUST be pinned batch-only: without the constraint they
+        # inherit head_dim=model sharding from wk/wv and the score
+        # contraction all-reduces the full (Sq,T) matrix — measured
+        # 13.7 TB/device/step on qwen1.5-4b prefill_32k (§Perf H-Q1).
+        q = constrain(q, "act_batch", "act_seq_cp", "act_heads", None)
+        k = constrain(k, "act_batch", "act_seq_cp", "act_kv_heads", None)
+        v = constrain(v, "act_batch", "act_seq_cp", "act_kv_heads", None)
+    q = q.reshape(b, s, k_heads, g, dh)
+
+    new_cache = None
+    if cache is not None:
+        if jnp.ndim(cur_len) == 1:
+            # per-slot positions (continuous batching): scatter each
+            # sequence's token at its own index
+            bidx = jnp.arange(b)
+            ck = cache["k"].at[bidx, cur_len].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, cur_len].set(
+                v[:, 0].astype(cache["v"].dtype))
+            valid = (cur_len + s)[:, None, None]
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+                cache["k"].dtype), cur_len, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+                cache["v"].dtype), cur_len, axis=1)
+            valid = cur_len + s
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck.astype(dt), cv.astype(dt)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        q_pos = positions
+        out = gqa_attention(q, k, v, q_pos, k_pos, window=window,
+                            causal=True, valid_len=valid,
+                            softcap=cfg.logit_softcap)
+    else:
+        k_pos = positions[0] if positions.ndim > 1 else positions
+        out = gqa_attention(q, k, v, positions, k_pos, window=window,
+                            causal=True, q_chunk=cfg.q_chunk,
+                            softcap=cfg.logit_softcap)
+
+    out = out.reshape(b, s, k_heads * g, dh)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return constrain(y, "act_batch", "act_seq", "act_embed"), new_cache
+
+
+def cross_attention(p: Dict[str, jax.Array], x: jax.Array,
+                    cond_k: jax.Array, cond_v: jax.Array, cfg
+                    ) -> jax.Array:
+    """Cross-attention to a precomputed conditioning sequence (musicgen).
+    cond_k/cond_v: (B, S_cond, K, dh) — computed once per sequence."""
+    b, s, _ = x.shape
+    k_heads, g, dh = cfg.n_kv_heads, cfg.q_per_kv, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(dt))
+    q = q.reshape(b, s, k_heads, g, dh)
+    t = cond_k.shape[1]
+    mask = jnp.ones((s, t), dtype=bool)
+    out = dot_attention(q, cond_k.astype(dt), cond_v.astype(dt), mask)
+    out = out.reshape(b, s, k_heads * g, dh)
+    y = jnp.einsum("bshe,hed->bsd", out, p["wo"].astype(dt))
+    return y
+
+
+def cross_kv(p: Dict[str, jax.Array], cond: jax.Array, cfg):
+    """Project the conditioning sequence to k/v once (reused every layer
+    application / every decode step)."""
+    dt = cond.dtype
+    k = jnp.einsum("btd,dke->btke", cond, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dke->btke", cond, p["wv"].astype(dt))
+    return k, v
+
+
+def init_cache(cfg, batch: int, max_len: int, abstract: bool = False,
+               dtype=None):
+    """Zero (or abstract) KV cache for one attention layer."""
+    dtype = dtype or cfg.dtype_jnp
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if abstract:
+        return {"k": jax.ShapeDtypeStruct(shape, dtype),
+                "v": jax.ShapeDtypeStruct(shape, dtype)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,39 @@
+"""Dense feed-forward blocks (gated SwiGLU / GeGLU or plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+
+
+def _act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "relu": jax.nn.relu}[name]
+
+
+def init_mlp(ini, pfx: str, cfg, stack: int = 0, d_ff: int = 0) -> None:
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("w_in", (d, f), ("embed", "mlp"))
+    if cfg.mlp_gated:
+        mk("w_gate", (d, f), ("embed", "mlp"))
+    mk("w_out", (f, d), ("mlp", "embed"))
+
+
+def mlp(p, x, cfg):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dt))
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+        h = _act(cfg.act)(g) * h
+    else:
+        h = _act(cfg.act)(h)
+    h = constrain(h, "act_batch", "act_seq", "act_mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(dt))
+    return constrain(y, "act_batch", "act_seq", "act_embed")

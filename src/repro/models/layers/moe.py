@@ -1,0 +1,123 @@
+"""Mixture-of-experts FFN with capacity-based scatter dispatch.
+
+Tokens-choose-top-k routing. Dispatch builds per-expert capacity buffers
+(E, C, d) via scatter-add (honest FLOP accounting: expert compute is the
+grouped einsum 2·E·C·d·f, dispatch/combine are memory ops, unlike the
+dense one-hot-einsum GShard formulation whose dispatch FLOPs would
+swamp the roofline). Experts are expert-parallel over the 'model' mesh
+axis; capacity over 'data' — XLA lowers the resharding to all-to-all
+style collectives, visible in the dry-run's collective table.
+
+Supports: top-k renormalized gates, Switch-style load-balance auxiliary
+loss, router z-loss, optional parallel dense FFN (Arctic's dense-MoE
+hybrid) and shared expert (Llama-4 style).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.mlp import _act, init_mlp, mlp
+from repro.sharding.rules import constrain
+
+
+def init_moe(ini, pfx: str, cfg, stack: int = 0) -> None:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("router", (d, e), ("embed", "experts"))
+    mk("w_in", (e, d, f), ("experts", "embed", "expert_mlp"))
+    if cfg.mlp_gated:
+        mk("w_gate", (e, d, f), ("experts", "embed", "expert_mlp"))
+    mk("w_out", (e, f, d), ("experts", "expert_mlp", "embed"))
+    if cfg.moe_dense_residual:
+        init_mlp(ini, f"{pfx}/dense", cfg, stack=stack)
+    if cfg.shared_expert:
+        init_mlp(ini, f"{pfx}/shared", cfg, stack=stack)
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p: Dict[str, jax.Array], x: jax.Array, cfg
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B, S, d) -> (y, aux_losses)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    cap = capacity(cfg, t)
+    dt = x.dtype
+    xf = x.reshape(t, d)
+
+    # --- router: bf16 matmul, fp32 softmax/top-k. Keeping the einsum
+    # (and its VJP) in bf16 matters: an fp32 router dx adds an fp32
+    # component to the whole layer's dx chain and every boundary
+    # all-reduce doubles (measured on arctic train_4k, §Perf H-A1). ---
+    logits = jnp.einsum("td,de->te", xf,
+                        p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                    # (t, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # --- aux losses ---
+    # Switch load-balance: E * sum_e (frac tokens to e) * (mean prob e)
+    me = jnp.mean(probs, axis=0)
+    one_hot_top1 = jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = {
+        "load_balance": e * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+
+    # --- capacity positions: cumulative count per expert over (t*k) ---
+    flat_idx = idx.reshape(-1)                             # (t*k,) token-major
+    oh = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)      # (t*k, e)
+    pos_in_e = jnp.cumsum(oh, axis=0) - oh                 # position before me
+    pos = jnp.sum(pos_in_e * oh, axis=-1)                  # (t*k,)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_idx * cap + pos, e * cap)  # overflow -> waste
+
+    # --- dispatch: scatter tokens into (E*C+1, d) buffers ---
+    src = jnp.repeat(xf, k, axis=0)                        # (t*k, d)
+    buf = jnp.zeros((e * cap + 1, d), dt).at[slot].add(src.astype(dt))
+    buf = buf[:-1].reshape(e, cap, d)
+    buf = constrain(buf, "act_experts", "act_capacity", None)
+
+    # --- expert FFN (grouped einsum) ---
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(dt))
+    if cfg.mlp_gated:
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+        h = _act(cfg.act)(g) * h
+    else:
+        h = _act(cfg.act)(h)
+    h = constrain(h, "act_experts", "act_capacity", None)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
+    out = constrain(out, "act_experts", "act_capacity", None)
+
+    # --- combine: gather slots back, weight by gates ---
+    out_flat = out.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, e * cap - 1)],
+                         jnp.zeros((1, d), dt))            # (t*k, d)
+    w = (gate.reshape(-1) * keep).astype(dt)[:, None]
+    y = jnp.sum((gathered * w).reshape(t, k, d), axis=1)
+
+    y = y.reshape(b, s, d)
+    # dense residual / shared expert run on the (B,S,d) layout: an
+    # (1, t, d) layout has an unshardable batch dim and XLA replicates
+    # the whole FFN across 'model' (measured 16x flops + ~2 TB/step of
+    # gathers on arctic, §Perf H-A2).
+    if cfg.moe_dense_residual:
+        y = y + mlp({kk[len("dense/"):]: v for kk, v in p.items()
+                     if kk.startswith("dense/")}, x, cfg)
+    if cfg.shared_expert:
+        y = y + mlp({kk[len("shared/"):]: v for kk, v in p.items()
+                     if kk.startswith("shared/")}, x, cfg)
+    return constrain(y, "act_batch", "act_seq", "act_embed"), aux

@@ -1,0 +1,34 @@
+"""Normalization layers (fp32 internals regardless of activation dtype)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_rmsnorm(ini, path: str, d: int, stack: int = 0) -> None:
+    shape, names = (d,), ("embed",)
+    if stack:
+        shape, names = (stack,) + shape, ("layers",) + names
+    ini.make(path, shape, names, init="ones")
+
+
+def rmsnorm(scale, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dtype)
+
+
+def groupnorm_heads(scale, bias, x, n_heads: int, eps: float = 1e-5):
+    """GroupNorm with one group per head over the last dim (RWKV6 'ln_x').
+    x: (..., H*dh)."""
+    dtype = x.dtype
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (n_heads, shp[-1] // n_heads)).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = (xh - mu) / jnp.sqrt(var + eps)
+    y = y.reshape(shp)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,101 @@
+"""RecurrentGemma / Griffin recurrent block: Conv1D + RG-LRU.
+
+RG-LRU (real-gated linear recurrent unit):
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_i x_t + b_i)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The diagonal recurrence is evaluated with jax.lax.associative_scan over
+the sequence (elements (a, b) compose as (a2*a1, a2*b1 + b2)).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.rules import constrain
+
+
+def init_recurrent_block(ini, pfx: str, cfg, stack: int = 0) -> None:
+    d, dr, cw = cfg.d_model, cfg.d_rnn, cfg.conv_width
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("w_x", (d, dr), ("embed", "rnn"))
+    mk("w_gate_branch", (d, dr), ("embed", "rnn"))
+    mk("conv_w", (cw, dr), ("conv", "rnn"))
+    mk("conv_b", (dr,), ("rnn",), init="zeros")
+    mk("w_a", (dr, dr), ("rnn", "rnn"))
+    mk("b_a", (dr,), ("rnn",), init="zeros")
+    mk("w_i", (dr, dr), ("rnn", "rnn"))
+    mk("b_i", (dr,), ("rnn",), init="zeros")
+    # Lambda init so a ~ uniform(0.9, 0.999)^(c*r): standard Griffin init
+    mk("lam", (dr,), ("rnn",), init="uniform", scale=1.0)
+    mk("w_out", (dr, d), ("rnn", "embed"))
+
+
+def _causal_conv1d(x, w, b, conv_state=None):
+    """Depthwise causal conv. x (B,S,dr), w (cw,dr). conv_state (B,cw-1,dr)
+    carries the last cw-1 inputs for decode."""
+    cw = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else pad
+    return out + b.astype(x.dtype), new_state
+
+
+def _rg_lru(p, x, cfg, h0=None):
+    """x (B,S,dr) -> (y, h_last). Associative scan over S."""
+    f32 = jnp.float32
+    x32 = x.astype(f32)
+    r = jax.nn.sigmoid(x32 @ p["w_a"].astype(f32) + p["b_a"].astype(f32))
+    i = jax.nn.sigmoid(x32 @ p["w_i"].astype(f32) + p["b_i"].astype(f32))
+    # Lambda parametrized so softplus gives a stable positive rate
+    log_a = -cfg.rg_lru_c * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * x32)
+
+    if x.shape[1] == 1 and h0 is not None:  # decode
+        h = a[:, 0] * h0 + gated[:, 0]
+        return h.astype(x.dtype)[:, None], h
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_seq, h_seq = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h_seq = h_seq + a_seq * h0[:, None]
+    return h_seq.astype(x.dtype), h_seq[:, -1]
+
+
+def recurrent_block(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                    state: Tuple = None) -> Tuple[jax.Array, Tuple]:
+    """Griffin recurrent mixer. state = (conv_state, h_state) for decode."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x,
+                                  p["w_gate_branch"].astype(dt)))
+    xr = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(dt))
+    xr = constrain(xr, "act_batch", "act_seq", "act_rnn")
+    conv_state = state[0] if state is not None else None
+    h_state = state[1] if state is not None else None
+    xr, new_conv = _causal_conv1d(xr, p["conv_w"], p["conv_b"], conv_state)
+    y, new_h = _rg_lru(p, xr, cfg, h_state)
+    y = y * gate
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt))
+    out = constrain(out, "act_batch", "act_seq", "act_embed")
+    return out, (new_conv, new_h.astype(jnp.float32))

@@ -1,0 +1,217 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear attention.
+
+Time mix uses the ddlerp token-shift (low-rank data-dependent lerp into
+five projection streams), per-channel data-dependent decay
+w_t = exp(-exp(logit)), and the "bonus" u for the current token:
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_t^T),
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T            (per head)
+
+The sequence form is evaluated with a CHUNKED scan (chunk size
+cfg.gla_chunk): intra-chunk contributions use an exact pairwise decay
+tensor (all exponents <= 0, numerically safe for any decay), inter-chunk
+state is carried by lax.scan. This is the XLA reference of the Pallas
+kernel in repro.kernels.gla_chunked.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers.norms import groupnorm_heads
+from repro.sharding.rules import constrain
+
+N_STREAMS = 5  # w, k, v, r, g
+LORA_TOKENSHIFT = 32
+LORA_DECAY = 64
+
+
+def init_rwkv_time_mix(ini, pfx: str, cfg, stack: int = 0) -> None:
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = cfg.head_dim
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("mu_base", (d,), ("embed",), init="zeros")
+    mk("mu", (N_STREAMS, d), (None, "embed"), init="zeros")
+    mk("ts_lora_a", (d, N_STREAMS * LORA_TOKENSHIFT), ("embed", None))
+    mk("ts_lora_b", (N_STREAMS, LORA_TOKENSHIFT, d), (None, None, "embed"),
+       init="zeros")
+    mk("w0", (d,), ("embed",), init="zeros")
+    mk("w_lora_a", (d, LORA_DECAY), ("embed", None))
+    mk("w_lora_b", (LORA_DECAY, d), (None, "embed"), init="zeros")
+    mk("u", (h, dh), ("heads", "head_dim"), init="zeros")
+    for nm in ("wr", "wk", "wv", "wg"):
+        mk(nm, (d, d), ("embed", "mlp"))
+    mk("wo", (d, d), ("mlp", "embed"))
+    mk("ln_x_scale", (d,), ("embed",), init="ones")
+    mk("ln_x_bias", (d,), ("embed",), init="zeros")
+
+
+def init_rwkv_channel_mix(ini, pfx: str, cfg, stack: int = 0) -> None:
+    d, f = cfg.d_model, cfg.d_ff
+
+    def mk(name, shape, names, **kw):
+        if stack:
+            shape, names = (stack,) + shape, ("layers",) + names
+        ini.make(f"{pfx}/{name}", shape, names, **kw)
+
+    mk("mu_k", (d,), ("embed",), init="zeros")
+    mk("mu_r", (d,), ("embed",), init="zeros")
+    mk("wk", (d, f), ("embed", "mlp"))
+    mk("wv", (f, d), ("mlp", "embed"))
+    mk("wr", (d, d), ("embed", "mlp"))
+
+
+def _token_shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x_{t-1} stream; prev is the last token of the previous segment
+    (zeros at sequence start), shape (B, 1, d) or (B, d)."""
+    if prev.ndim == 2:
+        prev = prev[:, None]
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def gla_chunked_ref(r, k, v, w, u, chunk: int):
+    """Chunked linear attention with per-channel decay.
+
+    r,k,v,w: (B, S, H, dh) with w in (0,1); u: (H, dh).
+    Returns out (B, S, H, dh) and final state (B, H, dh, dh).
+    """
+    b, s, h, dh = r.shape
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    f32 = jnp.float32
+    r_, k_, v_ = (a.astype(f32).reshape(b, n, chunk, h, dh) for a in (r, k, v))
+    logw = jnp.log(jnp.maximum(w.astype(f32), 1e-20)).reshape(
+        b, n, chunk, h, dh)
+    lp = jnp.cumsum(logw, axis=2)                    # inclusive cumulant
+    lp_prev = lp - logw                              # exclusive: prod_{j<t}
+
+    # intra-chunk: out[t] = sum_{i<t} (r_t . k_i decayed) v_i + diag u term
+    # pairwise exponent lp_prev[t] - lp[i] <= 0 for i < t  (numerically safe)
+    pair = lp_prev[:, :, :, None, :, :] - lp[:, :, None, :, :, :]
+    # axes: (b, n, t, i, h, c)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    dec = jnp.where(tri[None, None, :, :, None, None], jnp.exp(pair), 0.0)
+    intra = jnp.einsum("bnthc,bnihc,bntihc,bnihe->bnthe",
+                       r_, k_, dec, v_)
+    bonus = jnp.einsum("bnthc,bnthc,hc,bnthe->bnthe",
+                       r_, k_, u.astype(f32), v_)
+    intra = intra + bonus
+
+    # inter-chunk: scan the (dh, dh) state across chunks
+    q_dec = r_ * jnp.exp(lp_prev)                    # (b,n,t,h,c)
+    k_dec = k_ * jnp.exp(lp[:, :, -1:, :, :] - lp)   # decay to chunk end
+    chunk_kv = jnp.einsum("bnthc,bnthe->bnhce", k_dec, v_)
+    chunk_decay = jnp.exp(lp[:, :, -1])              # (b,n,h,c)
+
+    def body(state, xs):
+        kv_n, dec_n, q_n = xs
+        out_inter = jnp.einsum("bthc,bhce->bthe", q_n, state)
+        state = dec_n[..., None] * state + kv_n
+        return state, out_inter
+
+    xs = (jnp.moveaxis(chunk_kv, 1, 0), jnp.moveaxis(chunk_decay, 1, 0),
+          jnp.moveaxis(q_dec, 1, 0))
+    state0 = jnp.zeros((b, h, dh, dh), f32)
+    state, inter = jax.lax.scan(body, state0, xs)
+    inter = jnp.moveaxis(inter, 0, 1)                # (b,n,t,h,e)
+
+    out = (intra + inter).reshape(b, s, h, dh)
+    return out.astype(r.dtype), state
+
+
+def gla_decode_step(r, k, v, w, u, state):
+    """Single-token recurrence. r,k,v,w: (B, H, dh); state (B, H, dh, dh)."""
+    f32 = jnp.float32
+    r_, k_, v_, w_ = (a.astype(f32) for a in (r, k, v, w))
+    kv = k_[..., :, None] * v_[..., None, :]          # (B,H,c,e)
+    out = jnp.einsum("bhc,bhce->bhe", r_, state + u.astype(f32)[..., None] * kv)
+    new_state = w_[..., None] * state + kv
+    return out.astype(r.dtype), new_state
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the five projection streams."""
+    delta = xx - x
+    base = x + delta * p["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(jnp.einsum("bsd,dr->bsr", base, p["ts_lora_a"].astype(
+        x.dtype)))
+    lo = lo.reshape(lo.shape[:-1] + (N_STREAMS, LORA_TOKENSHIFT))
+    adj = jnp.einsum("bsnr,nrd->bsnd", lo, p["ts_lora_b"].astype(x.dtype))
+    mix = p["mu"].astype(x.dtype) + adj               # (B,S,5,d)
+    return x[:, :, None, :] + delta[:, :, None, :] * mix
+
+
+def rwkv_time_mix(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                  shift_state=None, wkv_state=None
+                  ) -> Tuple[jax.Array, Tuple]:
+    """x: (B, S, d). Returns (out, (new_shift_state, new_wkv_state))."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    dt = x.dtype
+
+    prev = shift_state if shift_state is not None else jnp.zeros(
+        (b, d), dt)
+    xx = _token_shift(x, prev)
+    streams = _ddlerp(p, x, xx)                       # (B,S,5,d)
+    x_w, x_k, x_v, x_r, x_g = [streams[:, :, i] for i in range(N_STREAMS)]
+
+    # data-dependent decay (fp32 logits)
+    w_logit = (p["w0"].astype(jnp.float32)
+               + jnp.einsum("bsd,dr->bsr", x_w.astype(jnp.float32),
+                            p["w_lora_a"].astype(jnp.float32)) @
+               p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(jnp.clip(w_logit, -12.0, 4.0)))  # in (0,1)
+
+    r = jnp.einsum("bsd,de->bse", x_r, p["wr"].astype(dt)).reshape(
+        b, s, h, dh)
+    k = jnp.einsum("bsd,de->bse", x_k, p["wk"].astype(dt)).reshape(
+        b, s, h, dh)
+    v = jnp.einsum("bsd,de->bse", x_v, p["wv"].astype(dt)).reshape(
+        b, s, h, dh)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", x_g, p["wg"].astype(dt)))
+    w = w.reshape(b, s, h, dh)
+    u = p["u"]
+
+    if s == 1 and wkv_state is not None:
+        out, new_state = gla_decode_step(
+            r[:, 0], k[:, 0], v[:, 0], w[:, 0], u, wkv_state)
+        out = out[:, None]
+    else:
+        chunk = cfg.gla_chunk if s % cfg.gla_chunk == 0 else 1
+        out, new_state = gla_chunked_ref(r, k, v, w, u, chunk)
+        if wkv_state is not None:  # continuing from a previous state is
+            # only needed for decode; training always starts from zero.
+            pass
+    out = out.reshape(b, s, h * dh)
+    out = groupnorm_heads(p["ln_x_scale"], p["ln_x_bias"], out, h)
+    out = out * g
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dt))
+    new_shift = x[:, -1]
+    return (constrain(y, "act_batch", "act_seq", "act_embed"),
+            (new_shift, new_state.astype(jnp.float32)))
+
+
+def rwkv_channel_mix(p: Dict[str, jax.Array], x: jax.Array, cfg, *,
+                     shift_state=None) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    dt = x.dtype
+    prev = shift_state if shift_state is not None else jnp.zeros((b, d), dt)
+    xx = _token_shift(x, prev)
+    delta = xx - x
+    x_k = x + delta * p["mu_k"].astype(dt)
+    x_r = x + delta * p["mu_r"].astype(dt)
+    kk = jnp.einsum("bsd,df->bsf", x_k, p["wk"].astype(dt))
+    kk = jnp.square(jax.nn.relu(kk))
+    kk = constrain(kk, "act_batch", "act_seq", "act_mlp")
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(dt))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x_r, p["wr"].astype(dt)))
+    y = rr * kv
+    return constrain(y, "act_batch", "act_seq", "act_embed"), x[:, -1]

@@ -1,0 +1,42 @@
+"""Training losses: masked cross-entropy (+ router aux/z losses)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """logits (B,S,V) fp32, labels (B,S) int32; labels < 0 are masked.
+    Returns (sum_loss, n_valid)."""
+    mask = (labels >= 0)
+    lbl = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def total_loss(logits: jax.Array, labels: jax.Array,
+               aux: Dict[str, jax.Array], cfg
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    ce_sum, n = cross_entropy(logits, labels)
+    ce = ce_sum / jnp.maximum(n, 1.0)
+    loss = ce
+    metrics = {"ce": ce, "n_tokens": n}
+    if aux:
+        n_moe = max(sum(1 for k in cfg.block_pattern if k == "moe"), 1)
+        scale = 1.0 / (n_moe * max(cfg.n_cycles, 1) + n_moe * cfg.n_rem)
+        if "load_balance" in aux:
+            lb = aux["load_balance"] * scale
+            loss = loss + cfg.router_aux_weight * lb
+            metrics["load_balance"] = lb
+        if "router_z" in aux:
+            rz = aux["router_z"] * scale
+            loss = loss + cfg.router_z_weight * rz
+            metrics["router_z"] = rz
+    metrics["loss"] = loss
+    return loss, metrics

@@ -1,0 +1,129 @@
+"""Public model API: init / loss / prefill / decode_step.
+
+Everything is functional; `Model` only binds a ModelConfig.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import params as pp
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.models.losses import total_loss
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- parameters ----
+    def init(self, key: jax.Array) -> pp.Params:
+        ini = pp.Initializer(self.cfg.param_dtype_jnp, key=key)
+        tfm.init_model(ini, self.cfg)
+        return ini.params
+
+    def abstract_params(self) -> Tuple[pp.Params, pp.Axes]:
+        """(ShapeDtypeStruct pytree, logical-axes pytree) — used by the
+        dry-run; never allocates."""
+        ini = pp.Initializer(self.cfg.param_dtype_jnp, abstract=True)
+        tfm.init_model(ini, self.cfg)
+        return ini.params, ini.axes
+
+    def num_params(self) -> int:
+        specs, _ = self.abstract_params()
+        return int(sum(np.prod(v.shape) for v in specs.values()))
+
+    # ---- training ----
+    def forward_train(self, params, batch):
+        x, _, aux = tfm.forward(
+            params, self.cfg, mode="train",
+            tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
+            cond=batch.get("cond"),
+            mrope_positions=batch.get("mrope_positions"))
+        logits = tfm.logits_from_hidden(params, x, self.cfg)
+        return logits, aux
+
+    def loss_fn(self, params, batch):
+        cfg = self.cfg
+        if cfg.microbatch and batch["labels"].shape[0] > cfg.microbatch:
+            return self._loss_accum(params, batch)
+        logits, aux = self.forward_train(params, batch)
+        return total_loss(logits, batch["labels"], aux, cfg)
+
+    def _loss_accum(self, params, batch):
+        """Gradient-friendly microbatch loss: scan over microbatches so
+        activations for only one microbatch are live at a time."""
+        cfg = self.cfg
+        b = batch["labels"].shape[0]
+        mb = cfg.microbatch
+        n = b // mb
+        resh = jax.tree.map(
+            lambda x: x.reshape((n, mb) + x.shape[1:])
+            if hasattr(x, "shape") and x.shape and x.shape[0] == b else x,
+            batch)
+        if "mrope_positions" in batch and batch["mrope_positions"] is not None:
+            mp = batch["mrope_positions"]
+            resh["mrope_positions"] = jnp.moveaxis(
+                mp.reshape(3, n, mb, mp.shape[-1]), 1, 0)
+
+        def body(carry, xs):
+            logits, aux = self.forward_train(params, xs)
+            loss, metrics = total_loss(logits, xs["labels"], aux, cfg)
+            return carry + loss, metrics
+
+        if cfg.remat:
+            # second remat level: only microbatch boundaries live across
+            # the accumulation scan (logits/activations of one microbatch
+            # at a time); costs one extra fwd inside bwd (EXPERIMENTS.md
+            # §Perf examines this trade).
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+
+        total, metrics = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32), resh)
+        metrics = jax.tree.map(jnp.mean, metrics)
+        return total / n, metrics
+
+    # ---- serving ----
+    def prefill(self, params, batch):
+        """Full-sequence forward; returns (last_logits, cache)."""
+        x, cache, _ = tfm.forward(
+            params, self.cfg, mode="prefill",
+            tokens=batch.get("tokens"), embeddings=batch.get("embeddings"),
+            cond=batch.get("cond"),
+            mrope_positions=batch.get("mrope_positions"))
+        last = x[:, -1:]
+        logits = tfm.logits_from_hidden(params, last, self.cfg)
+        return logits[:, 0], cache
+
+    def decode_step(self, params, batch, cache, cur_len):
+        """One-token decode (serve_step). batch carries tokens (B,1) or
+        embeddings (B,1,d). Returns (logits (B,V), new_cache).
+
+        Weight-stationary sharding: activations are tiny at S=1, so
+        batch sharding is dropped (rule override) and dense matmuls
+        partial-sum over the FSDP 'data' axis instead of all-gathering
+        ~params-sized weights every token (measured 55 GB/token on
+        llama3-405b before this). KV caches stay batch-sharded via their
+        jit in_shardings."""
+        from repro.sharding.rules import rule_overrides
+        with rule_overrides(act_batch=None, act_seq_cp=None):
+            x, new_cache, _ = tfm.forward(
+                params, self.cfg, mode="decode",
+                tokens=batch.get("tokens"),
+                embeddings=batch.get("embeddings"),
+                cur_len=cur_len, cache=cache, cond=batch.get("cond"),
+                mrope_positions=batch.get("mrope_positions"))
+            logits = tfm.logits_from_hidden(params, x, self.cfg)
+        return logits[:, 0], new_cache
+
+    # ---- caches ----
+    def init_cache(self, batch: int, max_len: int, abstract: bool = False):
+        return tfm.init_cache(self.cfg, batch, max_len, abstract)
+
+    def cache_axes(self):
+        return tfm.cache_axes(self.cfg)

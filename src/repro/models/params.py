@@ -1,0 +1,71 @@
+"""Parameter factory: one code path builds (a) concrete initialized
+params for tests/examples and (b) abstract ShapeDtypeStruct params +
+logical-axis annotations for the multi-pod dry-run (no allocation).
+
+Params are a FLAT dict path -> array. Scan-stacked layer params carry a
+leading "layers" axis. Subtree selection is by path prefix.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Dict[str, jax.Array]
+Axes = Dict[str, Tuple[Optional[str], ...]]
+
+
+class Initializer:
+    """Collects params + logical axes. abstract=True builds
+    ShapeDtypeStructs only (used by the dry-run)."""
+
+    def __init__(self, dtype, key: Optional[jax.Array] = None,
+                 abstract: bool = False):
+        self.dtype = dtype
+        self.key = key
+        self.abstract = abstract
+        self.params: Params = {}
+        self.axes: Axes = {}
+
+    def _key_for(self, path: str) -> jax.Array:
+        return jax.random.fold_in(self.key, zlib.crc32(path.encode()))
+
+    def make(self, path: str, shape: Tuple[int, ...],
+             names: Tuple[Optional[str], ...], init: str = "normal",
+             scale: Optional[float] = None) -> None:
+        assert len(shape) == len(names), (path, shape, names)
+        assert path not in self.params, f"duplicate param {path}"
+        self.axes[path] = names
+        if self.abstract:
+            self.params[path] = jax.ShapeDtypeStruct(shape, self.dtype)
+            return
+        if init == "zeros":
+            p = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            p = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else shape[-1]
+            s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+            p = (s * jax.random.normal(self._key_for(path), shape)
+                 ).astype(self.dtype)
+        elif init == "uniform":  # e.g. RG-LRU Lambda
+            s = scale if scale is not None else 1.0
+            p = (s * jax.random.uniform(self._key_for(path), shape)
+                 ).astype(self.dtype)
+        else:
+            raise ValueError(init)
+        self.params[path] = p
+
+
+def subtree(params: Params, prefix: str) -> Params:
+    pfx = prefix if prefix.endswith("/") else prefix + "/"
+    return {k[len(pfx):]: v for k, v in params.items() if k.startswith(pfx)}
+
+
+def merge(params: Params, prefix: str, sub: Params) -> None:
+    pfx = prefix if prefix.endswith("/") else prefix + "/"
+    for k, v in sub.items():
+        params[pfx + k] = v

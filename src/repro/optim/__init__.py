@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamW, AdamWState, global_norm  # noqa: F401
+from repro.optim.schedules import (  # noqa: F401
+    constant, inverse_sqrt, linear_warmup_cosine)
+from repro.optim.sgd import SGD, SGDState  # noqa: F401

@@ -1,0 +1,82 @@
+"""AdamW with configurable state dtype (bf16 m/v for the 405B config).
+
+Functional optax-style API: init(params) -> state; update(grads, state,
+params, lr) -> (new_params, new_state). Written from scratch so the
+framework has no external deps beyond jax/numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(z, params),
+                          v=jax.tree.map(z, params))
+
+    def init_abstract(self, param_specs) -> AdamWState:
+        dt = jnp.dtype(self.state_dtype)
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=jax.tree.map(z, param_specs),
+                          v=jax.tree.map(z, param_specs))
+
+    def update(self, grads, state: AdamWState, params, lr
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        dt = jnp.dtype(self.state_dtype)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay > 0 and p.ndim >= 2:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return p_new.astype(p.dtype), m_new.astype(dt), v_new.astype(dt)
+
+        out = jax.tree.map(upd, params, grads, state.m, state.v)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))

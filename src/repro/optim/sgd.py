@@ -1,0 +1,50 @@
+"""SGD with (Nesterov) momentum — used as the federated OUTER optimizer
+(DiLoCo-style) and as a light inner optimizer for examples."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    momentum: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params) -> SGDState:
+        if self.momentum == 0.0:
+            return SGDState(jnp.zeros((), jnp.int32), None)
+        return SGDState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(
+                            p, dtype=jnp.float32), params))
+
+    def update(self, grads, state: SGDState, params, lr
+               ) -> Tuple[Any, SGDState]:
+        step = state.step + 1
+        if self.momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads)
+            return new_params, SGDState(step, None)
+
+        def upd(p, g, m):
+            m_new = self.momentum * m + g.astype(jnp.float32)
+            d = (g.astype(jnp.float32) + self.momentum * m_new
+                 if self.nesterov else m_new)
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, params, grads, state.momentum)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, SGDState(step, new_m)

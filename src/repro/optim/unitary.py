@@ -1,0 +1,41 @@
+"""Exponential-map 'optimizer' for unitary-parametrized models (the
+QNN): U <- e^{i eps K} U with Hermitian K, plus periodic re-unitarization
+(QR polish) to keep long runs on the manifold despite float error."""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantum import linalg as ql
+
+
+def apply(params: List[jax.Array], ks: List[jax.Array], eps: float
+          ) -> List[jax.Array]:
+    out = []
+    for us, k in zip(params, ks):
+        upd = ql.expm_herm(k, eps)
+        out.append(jnp.einsum("jab,jbc->jac", upd, us))
+    return out
+
+
+def reunitarize(params: List[jax.Array]) -> List[jax.Array]:
+    """Project each perceptron back onto the unitary manifold via QR
+    (with phase fixing) — cheap insurance for >10^4-step runs."""
+    out = []
+    for us in params:
+        q, r = jnp.linalg.qr(us)
+        diag = jnp.diagonal(r, axis1=-2, axis2=-1)
+        ph = diag / jnp.abs(diag)
+        out.append(q * ph[..., None, :])
+    return out
+
+
+def unitarity_error(params: List[jax.Array]) -> jax.Array:
+    errs = []
+    for us in params:
+        eye = jnp.eye(us.shape[-1], dtype=us.dtype)
+        errs.append(jnp.max(jnp.abs(
+            jnp.einsum("jab,jcb->jac", us, jnp.conjugate(us)) - eye)))
+    return jnp.max(jnp.stack(errs))

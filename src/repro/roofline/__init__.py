@@ -1,0 +1,1 @@
+from repro.roofline.hlo_parse import parse_hlo  # noqa: F401

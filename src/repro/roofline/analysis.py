@@ -1,0 +1,124 @@
+"""Three-term roofline analysis from dry-run artifacts (deliverable g).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+Sources: loop-aware HLO parse (repro.roofline.hlo_parse) — XLA's own
+cost_analysis visits while bodies once and is reported alongside for
+reference. All parsed quantities are per device per step (SPMD module
+shapes are per-partition).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+NOTE on the CPU dry-run backend: XLA-CPU legalizes bf16 buffers to f32,
+so parsed byte totals for bf16 models are inflated up to 2x vs the TPU
+target; `*_bf16adj` columns apply a 0.5x correction to byte totals for
+bf16-dominant programs (documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link
+
+MODEL_FLOPS_FACTOR = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
+
+
+def model_flops(arch_params: Dict, shape: Dict, n_devices: int) -> float:
+    """6*N*D (train) / 2*N*D (inference) with N = active params,
+    per device."""
+    n_active = arch_params["active_params"]
+    if shape["kind"] == "decode":
+        tokens = shape["global_batch"]          # one token per sequence
+    else:
+        tokens = shape["global_batch"] * shape["seq_len"]
+    f = MODEL_FLOPS_FACTOR[shape["kind"]]
+    return f * n_active * tokens / n_devices
+
+
+def analyze_record(rec: Dict, arch_params: Dict, shape: Dict) -> Dict:
+    h = rec["hlo"]
+    n_dev = rec["n_devices"]
+    flops = h["dot_flops"]
+    hbm = h["hbm_bytes_proxy"]
+    coll = h["collective_bytes_total"]
+    bf16adj = 0.5 if arch_params.get("param_dtype", "bfloat16") == \
+        "bfloat16" else 1.0
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm * bf16adj / HBM_BW
+    t_coll = coll * bf16adj / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(arch_params, shape, n_dev)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "flops_per_dev": flops,
+        "hbm_bytes_per_dev": hbm * bf16adj,
+        "collective_bytes_per_dev": coll * bf16adj,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flop_ratio": mf / flops if flops else 0.0,
+        "peak_mem_gb": rec["memory_analysis"]["peak_bytes_per_device"]
+        / 1e9,
+        "arg_mem_gb": rec["memory_analysis"]["argument_bytes"] / 1e9,
+        "collective_breakdown": h["collective_bytes"],
+    }
+
+
+def arch_param_info() -> Dict[str, Dict]:
+    """Total and ACTIVE parameter counts per arch (MoE: router-selected
+    experts + shared/dense parts only)."""
+    from repro.configs import REGISTRY
+    from repro.models import Model
+    info = {}
+    for name, cfg in REGISTRY.items():
+        total = Model(cfg).num_params()
+        active = total
+        if cfg.n_experts:
+            # per-layer expert params counted at top_k instead of E
+            f_in = 2 if cfg.mlp_gated else 1
+            per_expert = (f_in + 1) * cfg.d_model * cfg.d_ff
+            expert_total = cfg.n_experts * per_expert * cfg.n_layers
+            expert_active = cfg.top_k * per_expert * cfg.n_layers
+            active = total - expert_total + expert_active
+        info[name] = {"total_params": total, "active_params": active,
+                      "param_dtype": cfg.param_dtype}
+    return info
+
+
+def load_records(dry_dir: str = "experiments/dryrun") -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def analyze_all(dry_dir: str = "experiments/dryrun") -> List[Dict]:
+    from repro.models.config import INPUT_SHAPES
+    info = arch_param_info()
+    out = []
+    for rec in load_records(dry_dir):
+        if rec.get("status") != "ok":
+            out.append(rec)
+            continue
+        shape = INPUT_SHAPES[rec["shape"]]
+        out.append(analyze_record(
+            rec, info[rec["arch"]],
+            {"kind": shape.kind, "global_batch": shape.global_batch,
+             "seq_len": shape.seq_len}))
+    return out

@@ -1,0 +1,108 @@
+"""Per-op collective/dot breakdown of a saved dry-run HLO — the
+'profiler' for §Perf hillclimbing (hypothesis targeting).
+
+    PYTHONPATH=src python -m repro.roofline.breakdown \
+        experiments/dryrun/llama3-405b__train_4k__single.hlo.txt --mesh single
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.roofline import hlo_parse as hp
+
+MESHES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+def collective_rows(text: str, mesh_shape=None):
+    comps = hp._split_computations(text)
+    mult = hp._multipliers(comps)
+    rows = []
+    for name, (ops, _) in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for op in ops:
+            if op.opcode in hp.COLLECTIVES:
+                factor = 2.0 if op.opcode == "all-reduce" else 1.0
+                b = hp._shape_bytes(op.type_str) * factor
+                axis = hp.classify_axes(op.rest, mesh_shape)
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                rows.append({
+                    "total_bytes": m * b, "mult": m, "bytes": b,
+                    "opcode": op.opcode, "axis": axis,
+                    "shape": op.type_str.strip()[:60],
+                    "op_name": (meta.group(1)[-90:] if meta else ""),
+                })
+    rows.sort(key=lambda r: -r["total_bytes"])
+    return rows
+
+
+def dot_rows(text: str):
+    comps = hp._split_computations(text)
+    table = hp._symbol_table(comps)
+    mult = hp._multipliers(comps)
+    rows = []
+    for name, (ops, _) in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for op in ops:
+            if op.opcode != "dot":
+                continue
+            out = hp._shape_dims(op.type_str)
+            cm = hp._CONTRACT_RE.search(op.rest)
+            operands = hp._OPERAND_RE.findall(op.rest)
+            if not (out and cm and operands):
+                continue
+            lhs = hp._shape_dims(table.get(operands[0], ""))
+            out_n = 1
+            for d in out[1]:
+                out_n *= d
+            k = 1
+            if lhs and cm.group(1):
+                for ci in cm.group(1).split(","):
+                    k *= lhs[1][int(ci)]
+            meta = re.search(r'op_name="([^"]*)"', op.rest)
+            rows.append({"total_flops": m * 2.0 * out_n * k, "mult": m,
+                         "shape": op.type_str.strip()[:48],
+                         "op_name": (meta.group(1)[-80:] if meta else "")})
+    rows.sort(key=lambda r: -r["total_flops"])
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo_file")
+    ap.add_argument("--mesh", default="single", choices=list(MESHES))
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--dots", action="store_true")
+    args = ap.parse_args()
+    text = open(args.hlo_file).read()
+
+    rows = collective_rows(text, MESHES[args.mesh])
+    by_axis = defaultdict(float)
+    for r in rows:
+        by_axis[r["axis"]] += r["total_bytes"]
+    print("== collective bytes by mesh axis (per device per step) ==")
+    for a, b in sorted(by_axis.items(), key=lambda kv: -kv[1]):
+        print(f"  {a:14s} {b/1e9:10.2f} GB")
+    print(f"\n== top {args.top} collectives ==")
+    for r in rows[:args.top]:
+        print(f"  {r['total_bytes']/1e9:8.2f}GB x{r['mult']:<6.0f} "
+              f"{r['opcode']:<18s} {r['axis']:<11s} {r['shape']}")
+        if r["op_name"]:
+            print(f"           {r['op_name']}")
+    if args.dots:
+        print(f"\n== top {args.top} dots ==")
+        for r in dot_rows(text)[:args.top]:
+            print(f"  {r['total_flops']/1e12:8.1f}TF x{r['mult']:<6.0f} "
+                  f"{r['shape']}  {r['op_name']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Markdown report generation for EXPERIMENTS.md §Dry-run / §Roofline."""
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+
+def fmt_bytes(b: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if abs(b) >= div:
+            return f"{b / div:.1f}{unit}"
+    return f"{b:.0f}B"
+
+
+def fmt_s(t: float) -> str:
+    if t >= 1.0:
+        return f"{t:.2f}s"
+    if t >= 1e-3:
+        return f"{t * 1e3:.1f}ms"
+    return f"{t * 1e6:.0f}us"
+
+
+def roofline_table(rows: List[Dict], mesh: str = "single") -> str:
+    """One markdown row per (arch x shape) for the given mesh."""
+    hdr = ("| arch | shape | compute | memory | collective | dominant | "
+           "useful/HLO FLOPs | peak mem/dev |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("status") == "skipped":
+            if r.get("mesh") == mesh or True:
+                pass
+            continue
+        if r["mesh"] != mesh:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['t_compute_s'])} | "
+            f"{fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_flop_ratio']:.2f} | "
+            f"{r['peak_mem_gb']:.1f}GB |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def dryrun_table(recs: List[Dict], mesh: str = "single") -> str:
+    hdr = ("| arch | shape | status | devices | args/dev | peak/dev | "
+           "dot FLOPs/dev | collectives/dev | compile |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP "
+                         f"(sub-quadratic rule) | – | – | – | – | – | – |")
+            continue
+        m = r["memory_analysis"]
+        h = r["hlo"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | ok | {r['n_devices']} | "
+            f"{fmt_bytes(m['argument_bytes'])} | "
+            f"{fmt_bytes(m['peak_bytes_per_device'])} | "
+            f"{h['dot_flops'] / 1e12:.1f}TF | "
+            f"{fmt_bytes(h['collective_bytes_total'])} | "
+            f"{r['seconds']['compile']:.0f}s |")
+    return hdr + "\n".join(lines) + "\n"

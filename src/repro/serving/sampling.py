@@ -1,0 +1,33 @@
+"""Token sampling strategies for serving (greedy / temperature /
+top-k / nucleus)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("temperature", "top_k", "top_p"))
+def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 0.0,
+           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """logits (B, V) -> token ids (B,). temperature==0 => greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits < kth, NEG_INF, logits)
+    if top_p > 0.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx[:, None],
+                                     axis=-1)
+        logits = jnp.where(logits < cutoff, NEG_INF, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

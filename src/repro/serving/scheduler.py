@@ -1,0 +1,181 @@
+"""Continuous-batching serving scheduler.
+
+Production-style request handling over a FIXED slot grid (the compiled
+serve_step shape never changes, so one compilation serves the whole
+lifetime): requests queue up, idle slots are claimed per step, every
+slot decodes in lock-step with its own position counter, finished
+sequences (EOS or max_tokens) free their slot immediately for the next
+queued request — no waiting for the whole batch to drain.
+
+Per-slot positions require position-aware attention: the scheduler
+passes a per-slot `cur_len` VECTOR; the underlying one-token step uses
+per-slot positions for RoPE and masking. The batched serve_step in
+launch/steps.py takes a scalar cur_len (all-slots-synchronized decode,
+as lowered in the dry-run); this scheduler wraps the model directly
+with a vectorized step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32 token ids
+    max_new_tokens: int = 16
+    eos_id: int = -1              # -1 = never
+    # filled by the scheduler
+    generated: Optional[List[int]] = None
+    done: bool = False
+
+
+def make_slot_step(model: Model):
+    """One lock-step decode over all slots with PER-SLOT positions.
+
+    active slots advance by one token; idle slots compute but their
+    cache writes land in a scratch position (their cur stays 0 and
+    output is discarded) — the fixed-shape price of continuous batching.
+    """
+    cfg = model.cfg
+
+    def step(params, cache, tokens, cur, active, rng):
+        # tokens (B,1) int32; cur (B,) int32; active (B,) bool
+        positions = cur[:, None]
+        x, new_cache, _ = _forward_decode(model, params, tokens, cache,
+                                          positions, cur)
+        logits = _logits(model, params, x)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # freeze idle slots' caches: keep old values where inactive
+        new_cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                _bcast(active, new.shape), new, old), new_cache, cache)
+        cur = jnp.where(active, cur + 1, cur)
+        return next_tok, cur, new_cache
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def _bcast(active, shape):
+    """Broadcast (B,) or stacked (L,B,...) mask to `shape`."""
+    if len(shape) >= 2 and shape[1] == active.shape[0]:
+        # stacked layer-major cache (L, B, ...)
+        return active.reshape((1, -1) + (1,) * (len(shape) - 2))
+    return active.reshape((-1,) + (1,) * (len(shape) - 1))
+
+
+def _forward_decode(model, params, tokens, cache, positions, cur):
+    from repro.models import transformer as tfm
+    from repro.sharding.rules import rule_overrides
+    with rule_overrides(act_batch=None, act_seq_cp=None):
+        # per-slot positions: pass the vector; rope/mask consume (B,1)
+        return tfm.forward(params, model.cfg, mode="decode",
+                           tokens=tokens, positions=positions,
+                           cur_len=cur, cache=cache)
+
+
+def _logits(model, params, x):
+    from repro.models import transformer as tfm
+    from repro.sharding.rules import rule_overrides
+    with rule_overrides(act_batch=None):
+        return tfm.logits_from_hidden(params, x, model.cfg)[:, 0]
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching around a Model."""
+
+    def __init__(self, model: Model, params, n_slots: int = 4,
+                 max_len: int = 128):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.remaining = np.zeros(n_slots, np.int32)
+        self.cache = model.init_cache(n_slots, max_len)
+        self.cur = jnp.zeros((n_slots,), jnp.int32)
+        self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self.step_fn = make_slot_step(model)
+        self.completed: Dict[int, Request] = {}
+        self.steps_run = 0
+
+    def submit(self, req: Request) -> None:
+        req.generated = []
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Claim idle slots: teacher-force the prompt token by token
+        (prefill-by-decode keeps a single compiled step)."""
+        for i in range(self.n_slots):
+            if self.slots[i] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            self.slots[i] = req
+            self.remaining[i] = req.max_new_tokens
+            # reset this slot's state
+            self.cur = self.cur.at[i].set(0)
+            # feed prompt tokens through the shared step with only this
+            # slot active
+            active = np.zeros(self.n_slots, bool)
+            active[i] = True
+            for t, tok in enumerate(req.prompt):
+                self.tokens = self.tokens.at[i, 0].set(int(tok))
+                nxt, self.cur, self.cache = self.step_fn(
+                    self.params, self.cache, self.tokens, self.cur,
+                    jnp.asarray(active), None)
+                self.steps_run += 1
+            first = int(nxt[i])
+            req.generated.append(first)
+            self.remaining[i] -= 1           # the prefill's token counts
+            if (req.eos_id >= 0 and first == req.eos_id) \
+                    or self.remaining[i] <= 0:
+                req.done = True
+                self.completed[req.uid] = req
+                self.slots[i] = None
+                continue
+            self.tokens = self.tokens.at[i, 0].set(first)
+
+    def step(self) -> int:
+        """One scheduler tick: admit, decode one token on active slots,
+        retire finished requests. Returns number of active slots."""
+        self._admit()
+        active_np = np.array([s is not None for s in self.slots])
+        if not active_np.any():
+            return 0
+        nxt, self.cur, self.cache = self.step_fn(
+            self.params, self.cache, self.tokens, self.cur,
+            jnp.asarray(active_np), None)
+        self.steps_run += 1
+        nxt_np = np.asarray(nxt)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt_np[i])
+            req.generated.append(tok)
+            self.remaining[i] -= 1
+            hit_eos = (req.eos_id >= 0 and tok == req.eos_id)
+            out_of_budget = (self.remaining[i] <= 0
+                             or int(self.cur[i]) >= self.max_len - 1)
+            if hit_eos or out_of_budget:
+                req.done = True
+                self.completed[req.uid] = req
+                self.slots[i] = None           # slot freed THIS step
+            else:
+                self.tokens = self.tokens.at[i, 0].set(tok)
+        return int(active_np.sum())
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and all(s is None for s in self.slots):
+                return
+            self.step()
+        raise RuntimeError("scheduler did not drain")

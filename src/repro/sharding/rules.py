@@ -1,0 +1,197 @@
+"""Logical-axis sharding rules (MaxText-style, divisibility-safe).
+
+Params and activations are annotated with *logical* axis names; a rule
+table maps logical names to mesh axes. `spec_for` drops any mapping that
+does not divide the concrete dimension (e.g. kv_heads=8 on a model axis
+of 16 falls back to replicated), so one rule table serves every
+architecture and mesh.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rule table for the production meshes ('data', 'model') and
+# ('pod', 'data', 'model'). 'pod' is the federation axis: parameters are
+# NEVER sharded over it by rules (the fed substrate gives them an
+# explicit leading node axis instead).
+DEFAULT_RULES: Dict[str, Optional[str]] = {
+    # parameter axes
+    "embed": ("pod", "data"),  # FSDP over data (and pod when present)
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    # head_dim falls back to 'model' when heads/kv_heads don't divide it
+    # (e.g. qwen1.5's 20 heads on a 16-way axis): spec_for's used-axis
+    # tracking makes heads and head_dim mutually exclusive.
+    "head_dim": "model",
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "rnn": "model",
+    "layers": None,
+    "conv": None,
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    # Megatron-style sequence parallelism at layer boundaries
+    "act_seq_sp": "model",
+    # decode KV-cache sequence dim (distributed-softmax decode)
+    "act_cache_seq": "model",
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_embed": None,
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_experts": "model",
+    "act_capacity": "data",
+    "act_rnn": "model",
+    # KV-cache head_dim: sharded over 'model' when kv_heads doesn't
+    # divide it (spec_for's used-axis tracking makes these exclusive)
+    "cache_head_dim": "model",
+    # context parallelism: query-sequence over 'model' for archs whose
+    # head count does not divide the model axis (e.g. qwen1.5's 20 heads)
+    "act_seq_cp": "model",
+    # federation axis (leading node dim in fed mode)
+    "fed_node": "pod",
+    None: None,
+}
+
+
+# Context overrides for the rule table (e.g. decode's weight-stationary
+# mode replaces batch sharding with activation partial-sum all-reduces:
+# gathering 50 GB of FSDP weights per decoded token is the alternative).
+_OVERRIDES: Dict[str, Optional[str]] = {}
+
+
+class rule_overrides:
+    def __init__(self, **kv):
+        self.kv = kv
+        self.saved: Dict[str, Optional[str]] = {}
+
+    def __enter__(self):
+        for k, v in self.kv.items():
+            self.saved[k] = _OVERRIDES.get(k, _MISSING)
+            _OVERRIDES[k] = v
+        return self
+
+    def __exit__(self, *exc):
+        for k, old in self.saved.items():
+            if old is _MISSING:
+                _OVERRIDES.pop(k, None)
+            else:
+                _OVERRIDES[k] = old
+        return False
+
+
+_MISSING = object()
+
+
+def active_rules(rules: Optional[Dict[str, Optional[str]]] = None
+                 ) -> Dict[str, Optional[str]]:
+    base = rules or DEFAULT_RULES
+    if not _OVERRIDES:
+        return base
+    merged = dict(base)
+    merged.update(_OVERRIDES)
+    return merged
+
+
+def axis_size(mesh: Mesh, axis: Optional[str]) -> int:
+    if axis is None:
+        return 1
+    return mesh.shape.get(axis, 1) if axis in mesh.axis_names else 1
+
+
+# Names that claim their mesh axis BEFORE positional order (so e.g. a
+# cache's kv_heads outranks its seq dim for the 'model' axis).
+PRIORITY_NAMES = ("heads", "kv_heads", "act_heads", "act_kv_heads",
+                  "experts", "act_experts", "mlp", "act_mlp", "vocab",
+                  "act_vocab")
+
+
+def _as_axes(rule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def spec_for(shape: Sequence[int], names: Sequence[Optional[str]],
+             mesh: Mesh, rules: Optional[Dict[str, Optional[str]]] = None
+             ) -> P:
+    """PartitionSpec for `shape` given logical `names`.
+
+    - a rule may name several mesh axes (e.g. act_batch over
+      ('pod','data')); axes absent from the mesh are dropped
+    - any axis whose (product) size does not divide the dimension is
+      dropped — one rule table serves every architecture and mesh
+    - PRIORITY_NAMES claim axes before positionally-earlier dims
+    """
+    rules = active_rules(rules)
+    assert len(shape) == len(names), (shape, names)
+    out: list = [None] * len(shape)
+    used = set()
+
+    def try_assign(i: int) -> None:
+        axes = [a for a in _as_axes(rules.get(names[i]))
+                if a in mesh.axis_names and a not in used]
+        # greedy: use the full axis tuple if divisible, else prefixes
+        while axes:
+            total = 1
+            for a in axes:
+                total *= axis_size(mesh, a)
+            if shape[i] % total == 0 and total > 1:
+                out[i] = tuple(axes) if len(axes) > 1 else axes[0]
+                used.update(axes)
+                return
+            axes.pop(0)  # drop the outermost axis and retry
+
+    for i, name in enumerate(names):
+        if name in PRIORITY_NAMES:
+            try_assign(i)
+    for i, name in enumerate(names):
+        if out[i] is None and name not in PRIORITY_NAMES:
+            try_assign(i)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def sharding_for(shape, names, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, names, mesh, rules))
+
+
+def tree_specs(shapes_tree, names_tree, mesh, rules=None):
+    """Map spec_for over parallel pytrees of shapes and logical names."""
+    return jax.tree.map(
+        lambda s, n: spec_for(s.shape, n, mesh, rules), shapes_tree,
+        names_tree, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def constrain(x: jax.Array, *names: Optional[str],
+              mesh: Optional[Mesh] = None,
+              rules: Optional[Dict[str, Optional[str]]] = None) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op outside a mesh
+    context (so smoke tests on 1 device run the same code path)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        return m if m is not None and not m.empty else None
+    except Exception:
+        return None
+
+
+def num_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

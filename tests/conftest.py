@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+# NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+# benches must see the real single CPU device; only launch/dryrun.py
+# fakes 512 devices (and it does so before importing jax).
+
+
+@pytest.fixture
+def x64():
+    """Enable float64/complex128 for numerically-delicate quantum tests."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", prev)

@@ -1,0 +1,126 @@
+"""Substrate tests: checkpointing round-trip, data pipeline, optimizers,
+schedules, HLO parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import BigramTask, partition_non_iid, token_batches
+from repro.optim import AdamW, SGD, constant, linear_warmup_cosine
+from repro.optim.unitary import reunitarize, unitarity_error
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    params = {"a/w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+              "b/x": jnp.ones((4,), jnp.bfloat16),
+              "c/i": jnp.array([1, 2], jnp.int32)}
+    p = str(tmp_path / "ck.npz")
+    ckpt.save(p, params, step=17, extra={"arch": "t"})
+    restored, meta = ckpt.restore(p)
+    assert meta["step"] == 17 and meta["extra"]["arch"] == "t"
+    for k in params:
+        assert restored[k].dtype == params[k].dtype
+        np.testing.assert_array_equal(np.asarray(restored[k], np.float32),
+                                      np.asarray(params[k], np.float32))
+
+
+def test_bigram_task_learnable_structure():
+    task = BigramTask(64, seed=0, branching=2)
+    rng = np.random.default_rng(1)
+    toks = task.sample(rng, 8, 100)
+    # every transition must be one of the two successors
+    for b in range(8):
+        for t in range(100):
+            assert toks[b, t + 1] in task.successors[toks[b, t]]
+
+
+def test_token_batches_all_archs_shapes():
+    for arch in ("qwen1.5-4b", "musicgen-large", "qwen2-vl-72b"):
+        cfg = get_config(arch).reduced()
+        b = next(token_batches(cfg, 4, 16, seed=0))
+        assert b["labels"].shape == (4, 16)
+        if cfg.input_kind == "tokens":
+            assert b["tokens"].shape == (4, 16)
+        else:
+            assert b["embeddings"].shape == (4, 16, cfg.d_model)
+        if cfg.cross_attn:
+            assert b["cond"].shape == (4, cfg.cond_len, cfg.d_model)
+        if cfg.pos_kind == "mrope":
+            assert b["mrope_positions"].shape == (3, 4, 16)
+
+
+def test_partition_non_iid_sorted():
+    cfg = get_config("qwen1.5-4b").reduced()
+    b = next(token_batches(cfg, 16, 8, seed=0))
+    nodes = partition_non_iid(b, 4)
+    assert nodes["tokens"].shape == (4, 4, 8)
+    lead = np.asarray(nodes["tokens"][..., 0]).reshape(-1)
+    assert np.all(np.diff(lead) >= 0)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(300):
+        g = {"w": 2 * params["w"]}
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_sgd_momentum_step():
+    opt = SGD(momentum=0.9)
+    params = {"w": jnp.array([1.0])}
+    state = opt.init(params)
+    p1, state = opt.update({"w": jnp.array([1.0])}, state, params, 0.1)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [0.9], atol=1e-6)
+    p2, state = opt.update({"w": jnp.array([1.0])}, state, p1, 0.1)
+    # momentum term: m = 0.9*1 + 1 = 1.9
+    np.testing.assert_allclose(np.asarray(p2["w"]), [0.9 - 0.19],
+                               atol=1e-6)
+
+
+def test_grad_clip():
+    opt = AdamW(weight_decay=0.0, grad_clip=1.0)
+    params = {"w": jnp.zeros((3,))}
+    state = opt.init(params)
+    big = {"w": jnp.full((3,), 1e6)}
+    p1, _ = opt.update(big, state, params, 0.1)
+    assert np.all(np.isfinite(np.asarray(p1["w"])))
+
+
+def test_schedules():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    np.testing.assert_allclose(float(s(10)), 1.0, atol=1e-6)
+    assert float(s(100)) < 0.2
+    assert float(constant(0.5)(7)) == 0.5
+
+
+def test_unitary_reunitarize():
+    from repro.core.quantum import linalg as ql, qnn
+    params = qnn.init_params(jax.random.PRNGKey(0), (2, 2))
+    drifted = [p + 1e-3 for p in params]
+    assert float(unitarity_error(drifted)) > 1e-4
+    fixed = reunitarize(drifted)
+    assert float(unitarity_error(fixed)) < 1e-6
+
+
+def test_hlo_parser_loop_multipliers():
+    from repro.roofline.hlo_parse import parse_hlo
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, x).compile().as_text()
+    p = parse_hlo(txt)
+    np.testing.assert_allclose(p["dot_flops"], 7 * 2 * 64 ** 3)
+    assert p["dot_count"] == 7

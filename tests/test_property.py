@@ -1,0 +1,126 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantum import linalg as ql, qnn
+from repro.kernels import ref
+from repro.models.layers.rwkv import gla_chunked_ref
+from repro.sharding.rules import spec_for
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self._shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+@settings(deadline=None, max_examples=50)
+@given(dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       data=st.data())
+def test_spec_for_always_divisible(dims, data):
+    """Whatever the shape, every sharded dim divides its axis product —
+    the invariant that makes one rule table serve every arch/mesh."""
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    name_pool = [None, "embed", "vocab", "heads", "kv_heads", "mlp",
+                 "act_batch", "act_seq", "act_heads", "act_mlp",
+                 "experts", "head_dim", "act_cache_seq"]
+    names = tuple(data.draw(st.sampled_from(name_pool))
+                  for _ in dims)
+    spec = spec_for(tuple(dims), names, mesh)
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    used = []
+    for d, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            assert a not in used, "axis reused across dims"
+            used.append(a)
+            total *= sizes[a]
+        assert d % total == 0
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1), eps=st.floats(1e-4, 0.3))
+def test_qnn_step_preserves_unitarity(seed, eps):
+    key = jax.random.PRNGKey(seed)
+    params = qnn.init_params(key, (2, 2))
+    k1, k2 = jax.random.split(key)
+    phi_in = ql.haar_state(k1, 2, (4,))
+    phi_out = ql.haar_state(k2, 2, (4,))
+    ks = qnn.update_matrices(params, phi_in, phi_out, (2, 2), 1.0)
+    new = qnn.apply_updates(params, ks, eps)
+    for p in new:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-4))
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_qnn_cost_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    params = qnn.init_params(key, (2, 3, 2))
+    k1, k2 = jax.random.split(key)
+    phi_in = ql.haar_state(k1, 2, (4,))
+    phi_out = ql.haar_state(k2, 2, (4,))
+    c = float(qnn.cost_fidelity(params, phi_in, phi_out, (2, 3, 2)))
+    assert -1e-6 <= c <= 1 + 1e-6
+
+
+@settings(deadline=None, max_examples=8)
+@given(seed=st.integers(0, 2**31 - 1),
+       chunk=st.sampled_from([4, 8, 16]),
+       s=st.sampled_from([16, 32, 48]))
+def test_gla_chunk_size_invariance(seed, chunk, s):
+    """The chunked GLA evaluation must be chunk-size independent and
+    equal the naive recurrence (the model's correctness backbone)."""
+    if s % chunk:
+        chunk = s
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    shape = (1, s, 2, 4)
+    r = 0.5 * jax.random.normal(ks[0], shape)
+    k = 0.5 * jax.random.normal(ks[1], shape)
+    v = 0.5 * jax.random.normal(ks[2], shape)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], shape)) * 0.6 + 0.35
+    u = 0.3 * jax.random.normal(ks[4], (2, 4))
+    out, _ = gla_chunked_ref(r, k, v, w, u, chunk)
+    exp = ref.gla_recurrence_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-4)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 3))
+def test_channel_is_trace_preserving_any_width(seed, n):
+    widths = (n, max(1, n - 1) + 1)
+    key = jax.random.PRNGKey(seed)
+    params = qnn.init_params(key, widths)
+    phi = ql.haar_state(jax.random.fold_in(key, 1), widths[0], (3,))
+    rhos = qnn.feedforward(params, ql.pure_density(phi), widths)
+    tr = jnp.trace(rhos[-1], axis1=-2, axis2=-1)
+    np.testing.assert_allclose(np.asarray(jnp.real(tr)), 1.0, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_softmax_attention_rowsums(seed):
+    """Attention outputs are convex combinations of values: outputs lie
+    within [min(v), max(v)] per channel."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, 8, 4))
+    k = jax.random.normal(ks[1], (1, 8, 4))
+    v = jax.random.normal(ks[2], (1, 8, 4))
+    out = np.asarray(ref.attention_ref(q, k, v, causal=True))
+    vmin = np.asarray(v).min()
+    vmax = np.asarray(v).max()
+    assert out.min() >= vmin - 1e-5 and out.max() <= vmax + 1e-5

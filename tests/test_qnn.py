@@ -1,0 +1,116 @@
+"""Tests for the dissipative QNN: channels, adjoints, Proposition-1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantum import linalg as ql, qnn
+
+WIDTHS = (2, 3, 2)
+
+
+@pytest.fixture
+def params():
+    return qnn.init_params(jax.random.PRNGKey(0), WIDTHS)
+
+
+def test_init_shapes_unitary(params):
+    assert params[0].shape == (3, 8, 8)     # layer 1: m_in=2 -> dim 2^3
+    assert params[1].shape == (2, 16, 16)   # layer 2: m_in=3 -> dim 2^4
+    for p in params:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-5))
+
+
+def test_feedforward_trace_preserving(params):
+    phi = ql.haar_state(jax.random.PRNGKey(1), 2, batch=(6,))
+    rhos = qnn.feedforward(params, ql.pure_density(phi), WIDTHS)
+    assert [r.shape[-1] for r in rhos] == [4, 8, 4]
+    for r in rhos:
+        tr = jnp.trace(r, axis1=-2, axis2=-1)
+        np.testing.assert_allclose(np.asarray(jnp.real(tr)), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jnp.imag(tr)), 0.0, atol=1e-5)
+        # Hermitian, PSD (eigenvalues >= 0)
+        herm_err = jnp.max(jnp.abs(r - ql.dagger(r)))
+        assert float(herm_err) < 1e-5
+        evals = jnp.linalg.eigvalsh(r)
+        assert float(jnp.min(evals)) > -1e-5
+
+
+def test_adjoint_channel_duality(x64):
+    """tr(E(X) Y) == tr(X F(Y)) — the defining property used in backprop."""
+    params = qnn.init_params(jax.random.PRNGKey(0), WIDTHS)
+    key = jax.random.PRNGKey(2)
+    for l, (m_in, m_out) in enumerate([(2, 3), (3, 2)]):
+        kx, ky, key = jax.random.split(key, 3)
+        x = ql.pure_density(ql.haar_state(kx, m_in))
+        y = ql.pure_density(ql.haar_state(ky, m_out))
+        ex = qnn.layer_forward(params[l], x, m_in, m_out)
+        fy = qnn.layer_adjoint(params[l], y, m_in, m_out)
+        lhs = jnp.trace(ex @ y)
+        rhs = jnp.trace(x @ fy)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   atol=1e-10)
+
+
+def test_update_matrices_hermitian(params):
+    key = jax.random.PRNGKey(3)
+    ki, ko = jax.random.split(key)
+    phi_in = ql.haar_state(ki, 2, batch=(5,))
+    phi_out = ql.haar_state(ko, 2, batch=(5,))
+    ks = qnn.update_matrices(params, phi_in, phi_out, WIDTHS, eta=1.0)
+    for k in ks:
+        err = jnp.max(jnp.abs(k - ql.dagger(k)))
+        assert float(err) < 1e-5
+
+
+def test_updates_stay_unitary(params):
+    key = jax.random.PRNGKey(4)
+    ki, ko = jax.random.split(key)
+    phi_in = ql.haar_state(ki, 2, batch=(5,))
+    phi_out = ql.haar_state(ko, 2, batch=(5,))
+    ks = qnn.update_matrices(params, phi_in, phi_out, WIDTHS, eta=1.0)
+    new = qnn.apply_updates(params, ks, 0.1)
+    for p in new:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-4))
+
+
+def test_gradient_ascent_increases_fidelity(x64):
+    """Prop. 1 updates must climb the fidelity cost (Eq. 3)."""
+    params = qnn.init_params(jax.random.PRNGKey(5), WIDTHS)
+    key = jax.random.PRNGKey(6)
+    ku, kd = jax.random.split(key)
+    u_g = ql.haar_unitary(ku, 4)
+    phi_in = ql.haar_state(kd, 2, batch=(8,))
+    phi_out = jnp.einsum("ab,xb->xa", u_g, phi_in)
+    cost = qnn.cost_fidelity(params, phi_in, phi_out, WIDTHS)
+    for _ in range(10):
+        params, _ = qnn.local_step(params, phi_in, phi_out, WIDTHS, 1.0, 0.1)
+        new_cost = qnn.cost_fidelity(params, phi_in, phi_out, WIDTHS)
+        assert float(new_cost) > float(cost) - 1e-6
+        cost = new_cost
+    assert float(cost) > 0.4  # clearly above random (~0.25 for 2 qubits)
+
+
+def test_first_order_cost_gain_matches_k_norm(x64):
+    """dC/deps at eps=0 equals a positive quantity ~ ||K||^2 (gradient
+    ascent direction): finite-difference check of Prop. 1."""
+    params = qnn.init_params(jax.random.PRNGKey(7), WIDTHS)
+    key = jax.random.PRNGKey(8)
+    ki, ko = jax.random.split(key)
+    phi_in = ql.haar_state(ki, 2, batch=(6,))
+    u_g = ql.haar_unitary(ko, 4)
+    phi_out = jnp.einsum("ab,xb->xa", u_g, phi_in)
+    ks = qnn.update_matrices(params, phi_in, phi_out, WIDTHS, eta=1.0)
+    eps = 1e-5
+    c0 = qnn.cost_fidelity(params, phi_in, phi_out, WIDTHS)
+    c1 = qnn.cost_fidelity(qnn.apply_updates(params, ks, eps),
+                           phi_in, phi_out, WIDTHS)
+    fd = (float(c1) - float(c0)) / eps
+    assert fd > 0.0  # ascent direction
+    # analytic first-order gain: sum_l sum_j ||K||_F^2 / (eta 2^{m_in})
+    analytic = 0.0
+    for (m_in, _), k in zip([(2, 3), (3, 2)], ks):
+        analytic += float(jnp.sum(jnp.abs(k) ** 2)) / (2.0 ** m_in)
+    np.testing.assert_allclose(fd, analytic, rtol=1e-3)

@@ -1,0 +1,138 @@
+"""Unit + property tests for the density-matrix linear algebra layer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantum import linalg as ql
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_zero_state_projector():
+    v = ql.zero_state(2)
+    assert v.shape == (4,)
+    np.testing.assert_allclose(np.asarray(v)[0], 1.0)
+    p = ql.zero_projector(2)
+    np.testing.assert_allclose(np.asarray(jnp.trace(p)), 1.0, atol=1e-6)
+    # projector: P^2 == P
+    np.testing.assert_allclose(np.asarray(p @ p), np.asarray(p), atol=1e-6)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 3))
+def test_haar_state_normalized(seed, n):
+    psi = ql.haar_state(jax.random.PRNGKey(seed), n, batch=(3,))
+    norms = jnp.sum(jnp.abs(psi) ** 2, axis=-1)
+    np.testing.assert_allclose(np.asarray(norms), 1.0, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([2, 4, 8]))
+def test_haar_unitary_is_unitary(seed, d):
+    u = ql.haar_unitary(jax.random.PRNGKey(seed), d)
+    eye = np.eye(d)
+    np.testing.assert_allclose(np.asarray(u @ ql.dagger(u)), eye, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_partial_trace_preserves_trace(seed):
+    psi = ql.haar_state(jax.random.PRNGKey(seed), 3)
+    rho = ql.pure_density(psi)
+    for keep in ([0], [1], [2], [0, 1], [1, 2], [0, 2]):
+        red = ql.partial_trace(rho, keep=keep, n_qubits=3)
+        assert red.shape == (2 ** len(keep),) * 2
+        np.testing.assert_allclose(np.asarray(jnp.trace(red)), 1.0, atol=1e-5)
+
+
+def test_partial_trace_product_state():
+    # tr_B(|a><a| ⊗ |b><b|) == |a><a|
+    key = jax.random.PRNGKey(0)
+    ka, kb = jax.random.split(key)
+    a = ql.haar_state(ka, 1)
+    b = ql.haar_state(kb, 2)
+    rho = jnp.kron(ql.pure_density(a), ql.pure_density(b))
+    red = ql.partial_trace(rho, keep=[0], n_qubits=3)
+    np.testing.assert_allclose(np.asarray(red), np.asarray(ql.pure_density(a)),
+                               atol=1e-6)
+    red_b = ql.partial_trace(rho, keep=[1, 2], n_qubits=3)
+    np.testing.assert_allclose(np.asarray(red_b),
+                               np.asarray(ql.pure_density(b)), atol=1e-6)
+
+
+def test_partial_trace_keep_order():
+    # keeping qubits in swapped order transposes the tensor factors
+    key = jax.random.PRNGKey(1)
+    ka, kb = jax.random.split(key)
+    a = ql.pure_density(ql.haar_state(ka, 1))
+    b = ql.pure_density(ql.haar_state(kb, 1))
+    rho = jnp.kron(a, b)
+    red = ql.partial_trace(rho, keep=[1, 0], n_qubits=2)
+    np.testing.assert_allclose(np.asarray(red), np.asarray(jnp.kron(b, a)),
+                               atol=1e-6)
+
+
+def test_embed_unitary_identity_on_rest():
+    key = jax.random.PRNGKey(2)
+    u = ql.haar_unitary(key, 2)  # one-qubit unitary
+    full = ql.embed_unitary(u, [1], 2)  # act on qubit 1 of 2
+    expected = jnp.kron(jnp.eye(2, dtype=u.dtype), u)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(expected),
+                               atol=1e-6)
+    full0 = ql.embed_unitary(u, [0], 2)
+    expected0 = jnp.kron(u, jnp.eye(2, dtype=u.dtype))
+    np.testing.assert_allclose(np.asarray(full0), np.asarray(expected0),
+                               atol=1e-6)
+
+
+def test_embed_unitary_disjoint_commute():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    u1 = ql.embed_unitary(ql.haar_unitary(k1, 2), [0], 3)
+    u2 = ql.embed_unitary(ql.haar_unitary(k2, 2), [2], 3)
+    np.testing.assert_allclose(np.asarray(u1 @ u2), np.asarray(u2 @ u1),
+                               atol=1e-5)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.001, 1.0))
+def test_expm_herm_unitary(seed, scale):
+    key = jax.random.PRNGKey(seed)
+    a = ql.haar_unitary(key, 8)
+    k = a + ql.dagger(a)  # Hermitian
+    u = ql.expm_herm(k, scale)
+    eye = np.eye(8)
+    np.testing.assert_allclose(np.asarray(u @ ql.dagger(u)), eye, atol=1e-5)
+
+
+def test_expm_herm_matches_series(x64):
+    key = jax.random.PRNGKey(5)
+    a = ql.haar_unitary(key, 4)
+    k = (a + ql.dagger(a)) / 2
+    eps = 1e-4
+    u = ql.expm_herm(k, eps)
+    series = (jnp.eye(4, dtype=k.dtype) + 1j * eps * k
+              - 0.5 * eps**2 * (k @ k))
+    np.testing.assert_allclose(np.asarray(u), np.asarray(series), atol=1e-10)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_fidelity_bounds(seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    phi = ql.haar_state(k1, 2, batch=(4,))
+    psi = ql.haar_state(k2, 2, batch=(4,))
+    f = ql.fidelity_pure(phi, ql.pure_density(psi))
+    assert np.all(np.asarray(f) >= -1e-6)
+    assert np.all(np.asarray(f) <= 1 + 1e-6)
+    # self-fidelity is 1
+    f_self = ql.fidelity_pure(phi, ql.pure_density(phi))
+    np.testing.assert_allclose(np.asarray(f_self), 1.0, atol=1e-5)
+
+
+def test_mse_zero_for_identical():
+    phi = ql.haar_state(jax.random.PRNGKey(9), 2, batch=(4,))
+    mse = ql.mse_state(phi, ql.pure_density(phi))
+    np.testing.assert_allclose(np.asarray(mse), 0.0, atol=1e-6)

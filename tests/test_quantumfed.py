@@ -1,0 +1,142 @@
+"""System tests for the QuantumFed framework (Alg. 1 + Alg. 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+from repro.core.quantum import linalg as ql, qnn
+
+WIDTHS = (2, 3, 2)
+
+
+def small_setup(key, num_nodes=4, n_per_node=4, noise=0.0):
+    return qdata.make_federated_dataset(key, 2, num_nodes=num_nodes,
+                                        n_per_node=n_per_node,
+                                        noise_ratio=noise, n_test=16)
+
+
+def test_interval1_average_equals_centralized(x64):
+    """§III-C: with I_l=1 and full participation, QuantumFed (Eq. 8 form)
+    is EXACTLY one centralized step on the union dataset."""
+    key = jax.random.PRNGKey(0)
+    _, ds, _ = small_setup(key)
+    params = qnn.init_params(jax.random.PRNGKey(1), WIDTHS)
+
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4, nodes_per_round=4,
+                               interval_length=1, eps=0.05,
+                               aggregation="average")
+    fed_params = fed.server_round(params, ds, jax.random.PRNGKey(2), cfg)
+
+    all_in = ds.phi_in.reshape(-1, 4)
+    all_out = ds.phi_out.reshape(-1, 4)
+    central, _ = qnn.local_step(params, all_in, all_out, WIDTHS, 1.0, 0.05)
+
+    for f, c in zip(fed_params, central):
+        np.testing.assert_allclose(np.asarray(f), np.asarray(c), atol=1e-10)
+
+
+def test_lemma1_product_vs_average_eps2(x64):
+    """Lemma 1: |product - average| aggregation difference shrinks as
+    O(eps^2)."""
+    key = jax.random.PRNGKey(3)
+    _, ds, _ = small_setup(key)
+    params = qnn.init_params(jax.random.PRNGKey(4), WIDTHS)
+
+    diffs = []
+    for eps in (0.1, 0.01):
+        outs = {}
+        for agg in ("product", "average"):
+            cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                                       nodes_per_round=4, interval_length=2,
+                                       eps=eps, aggregation=agg)
+            outs[agg] = fed.server_round(params, ds, jax.random.PRNGKey(5),
+                                         cfg)
+        diffs.append(max(float(jnp.max(jnp.abs(a - b)))
+                         for a, b in zip(outs["product"], outs["average"])))
+    # eps 10x smaller => difference ~100x smaller (allow slack factor 3)
+    assert diffs[1] < diffs[0] / 30.0
+
+
+def test_params_stay_unitary_through_training():
+    key = jax.random.PRNGKey(6)
+    _, ds, test = small_setup(key)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4, nodes_per_round=2,
+                               interval_length=2, eps=0.1)
+    params, _ = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
+                          n_iterations=3, eval_every=3)
+    for p in params:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-3))
+
+
+def test_training_improves_fidelity():
+    key = jax.random.PRNGKey(8)
+    _, ds, test = small_setup(key, num_nodes=8, n_per_node=4)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8, nodes_per_round=4,
+                               interval_length=2, eps=0.1)
+    _, hist = fed.train(jax.random.PRNGKey(9), cfg, ds, test,
+                        n_iterations=10, eval_every=10)
+    assert hist["test_fidelity"][-1] > hist["test_fidelity"][0] + 0.05
+    assert hist["train_mse"][-1] < hist["train_mse"][0]
+
+
+def test_sgd_mode_runs_and_improves():
+    key = jax.random.PRNGKey(10)
+    _, ds, test = small_setup(key, num_nodes=8, n_per_node=4)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8, nodes_per_round=4,
+                               interval_length=2, eps=0.1, minibatch=2)
+    _, hist = fed.train(jax.random.PRNGKey(11), cfg, ds, test,
+                        n_iterations=10, eval_every=10)
+    assert hist["test_fidelity"][-1] > hist["test_fidelity"][0]
+
+
+def test_noise_pollution_shapes_and_effect():
+    key = jax.random.PRNGKey(12)
+    _, clean, _ = small_setup(key, noise=0.0)
+    _, noisy, _ = small_setup(key, noise=0.5)
+    assert clean.phi_in.shape == noisy.phi_in.shape
+    # half the pairs per node should differ
+    diff = np.asarray(jnp.any(jnp.abs(clean.phi_in - noisy.phi_in) > 1e-9,
+                              axis=-1))
+    frac = diff.mean()
+    assert 0.4 <= frac <= 0.6
+
+
+def test_non_iid_partition_sorted():
+    key = jax.random.PRNGKey(13)
+    u = qdata.make_target_unitary(key, 2)
+    phi_in, phi_out = qdata.make_pairs(jax.random.PRNGKey(14), u, 32, 2)
+    ds = qdata.partition_non_iid(phi_in, phi_out, 4)
+    assert ds.phi_in.shape == (4, 8, 4)
+    # sort key must be non-decreasing across node boundaries
+    keys = np.asarray(jnp.angle(ds.phi_in[..., 0]))
+    flat = keys.reshape(-1)
+    assert np.all(np.diff(flat) >= -1e-9)
+    # labels still match the target unitary (partition must not decouple
+    # inputs from outputs)
+    out = jnp.einsum("ab,nxb->nxa", u, ds.phi_in)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ds.phi_out),
+                               atol=1e-5)
+
+
+def test_channel_noise_unitary_and_robust():
+    """Beyond-paper: noisy uploads stay unitary; moderate noise does not
+    prevent improvement; extreme noise does."""
+    key = jax.random.PRNGKey(20)
+    _, ds, test = small_setup(key, num_nodes=8, n_per_node=4)
+    results = {}
+    for sigma in (2.0, 100.0):
+        cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8,
+                                   nodes_per_round=4, interval_length=2,
+                                   eps=0.1, upload_noise=sigma)
+        params, hist = fed.train(jax.random.PRNGKey(21), cfg, ds, test,
+                                 n_iterations=8, eval_every=8)
+        for p in params:
+            for u in p:
+                assert bool(ql.is_unitary(u, atol=1e-3))
+        results[sigma] = (hist["test_fidelity"][0],
+                         hist["test_fidelity"][-1])
+    assert results[2.0][1] > results[2.0][0] + 0.03   # still learns
+    assert results[100.0][1] < results[2.0][1]        # noise floor hurts

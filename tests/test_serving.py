@@ -1,0 +1,119 @@
+"""Continuous-batching scheduler tests: correctness vs sequential decode
+and slot reuse under heterogeneous request lengths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen1.5-4b").reduced(n_layers=2)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def greedy_reference(model, params, prompt, n_new):
+    """Sequential single-sequence greedy decode via the plain decode
+    path (the oracle the batcher must match)."""
+    cache = model.init_cache(1, 64)
+    tok = None
+    for t, p in enumerate(prompt):
+        logits, cache = model.decode_step(
+            params, {"tokens": jnp.asarray([[int(p)]], jnp.int32)},
+            cache, jnp.int32(t))
+        tok = int(jnp.argmax(logits[0]))
+    out = [tok]
+    t = len(prompt)
+    for _ in range(n_new - 1):
+        logits, cache = model.decode_step(
+            params, {"tokens": jnp.asarray([[tok]], jnp.int32)},
+            cache, jnp.int32(t))
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+        t += 1
+    return out
+
+
+def test_batcher_matches_sequential(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (5, 3, 7)]
+    n_new = 6
+
+    batcher = ContinuousBatcher(model, params, n_slots=2, max_len=64)
+    for uid, p in enumerate(prompts):
+        batcher.submit(Request(uid=uid, prompt=p, max_new_tokens=n_new))
+    batcher.run_until_drained()
+
+    assert set(batcher.completed) == {0, 1, 2}
+    for uid, p in enumerate(prompts):
+        expect = greedy_reference(model, params, p, n_new)
+        got = batcher.completed[uid].generated[:n_new]
+        assert got == expect, (uid, got, expect)
+
+
+def test_slot_reuse_overlapping_lifetimes(setup):
+    """3 requests through 2 slots: the freed slot must be reclaimed
+    before the other finishes (continuous batching, not drain-batching).
+    """
+    cfg, model, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=0, prompt=rng.integers(0, 64, 3).astype(np.int32),
+                    max_new_tokens=2),
+            Request(uid=1, prompt=rng.integers(0, 64, 3).astype(np.int32),
+                    max_new_tokens=12),
+            Request(uid=2, prompt=rng.integers(0, 64, 3).astype(np.int32),
+                    max_new_tokens=5)]
+    b = ContinuousBatcher(model, params, n_slots=2, max_len=64)
+    for r in reqs:
+        b.submit(r)
+    # run a few ticks: uid0 (2 tokens) finishes fast; uid2 must be
+    # admitted while uid1 is still decoding
+    overlapped = False
+    for _ in range(100):
+        b.step()
+        in_flight = {r.uid for r in b.slots if r is not None}
+        if 2 in in_flight and 1 in in_flight:
+            overlapped = True
+        if not b.queue and all(s is None for s in b.slots):
+            break
+    assert overlapped
+    assert set(b.completed) == {0, 1, 2}
+    assert len(b.completed[1].generated) == 12
+
+
+def test_eos_terminates_early(setup):
+    cfg, model, params = setup
+    rng = np.random.default_rng(2)
+    p = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+    # find which token greedy emits first, then use it as "EOS"
+    first = greedy_reference(model, params, p, 1)[0]
+    b = ContinuousBatcher(model, params, n_slots=1, max_len=64)
+    b.submit(Request(uid=0, prompt=p, max_new_tokens=50, eos_id=first))
+    b.run_until_drained()
+    gen = b.completed[0].generated
+    assert gen[gen.index(first):][0] == first
+    assert len(gen) < 50
+
+
+def test_sampling_strategies():
+    from repro.serving.sampling import sample
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]] * 3)
+    rng = jax.random.PRNGKey(0)
+    # greedy
+    assert list(np.asarray(sample(logits, rng))) == [1, 1, 1]
+    # temperature sampling stays within the top-k support
+    toks = sample(jnp.tile(logits, (100, 1)), rng, temperature=1.0,
+                  top_k=2)
+    assert set(np.asarray(toks).tolist()) <= {1, 2}
+    # nucleus: top_p tiny -> collapses to argmax
+    toks = sample(jnp.tile(logits, (50, 1)), rng, temperature=1.0,
+                  top_p=0.1)
+    assert set(np.asarray(toks).tolist()) == {1}

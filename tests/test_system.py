@@ -1,0 +1,89 @@
+"""End-to-end system tests: the full train → checkpoint → restore →
+serve loop on a reduced architecture, and the federated driver."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.data import token_batches
+from repro.launch.steps import make_serve_step, make_train_step
+from repro.models import Model
+from repro.optim import AdamW
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    cfg = get_config("qwen1.5-4b").reduced(n_layers=2)
+    model = Model(cfg)
+    opt = AdamW(weight_decay=0.0)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    data = token_batches(cfg, 8, 64, seed=0)
+    losses = []
+    for i in range(40):
+        batch = next(data)
+        params, opt_state, metrics = step(params, opt_state, batch,
+                                          jnp.float32(3e-3))
+        losses.append(float(metrics["loss"]))
+    path = str(tmp_path_factory.mktemp("ck") / "model.npz")
+    ckpt.save(path, params, step=40, extra={"arch": cfg.name})
+    return cfg, model, params, losses, path
+
+
+def test_training_reduces_loss(trained):
+    _, _, _, losses, _ = trained
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.1, (first, last)
+    assert np.isfinite(losses).all()
+
+
+def test_checkpoint_restore_identical_loss(trained):
+    cfg, model, params, _, path = trained
+    restored, meta = ckpt.restore(path)
+    assert meta["step"] == 40
+    batch = next(token_batches(cfg, 4, 64, seed=7))
+    l1 = float(model.loss_fn(params, batch)[0])
+    l2 = float(model.loss_fn(restored, batch)[0])
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_serve_after_training(trained):
+    cfg, model, params, _, _ = trained
+    serve = jax.jit(make_serve_step(model), donate_argnums=(1,))
+    cache = model.init_cache(2, 24)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    toks = []
+    for t in range(8):
+        nxt, logits, cache = serve(params, cache, {"tokens": tok},
+                                   jnp.int32(t))
+        assert logits.shape == (2, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = nxt[:, None]
+        toks.append(np.asarray(nxt))
+    # trained-on-bigram model should not emit all-identical garbage
+    assert len({int(x) for x in np.stack(toks).ravel()}) > 1
+
+
+def test_fed_driver_runs():
+    from repro.launch import fed_train
+    params = fed_train.main(["--arch", "qwen1.5-4b", "--rounds", "2",
+                             "--interval", "2", "--nodes", "4",
+                             "--nodes-per-round", "2", "--node-batch",
+                             "4", "--seq", "32"])
+    assert params is not None
+
+
+def test_train_driver_runs(tmp_path):
+    from repro.launch import train
+    loss = train.main(["--arch", "rwkv6-7b", "--scale", "smoke",
+                       "--steps", "6", "--batch", "4", "--seq", "32",
+                       "--log-every", "3",
+                       "--ckpt", str(tmp_path / "r.npz")])
+    assert np.isfinite(loss)
+    assert os.path.exists(tmp_path / "r.npz")
