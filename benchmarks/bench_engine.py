@@ -1,0 +1,78 @@
+"""Old (dense full-space) vs new (local-contraction) quantum engine:
+per-round ``server_round`` wall time across growing widths, the headline
+number of the engine rebuild. Emits ``BENCH_engine.json`` so later PRs
+can track the trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine [--out BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+from repro.core.quantum import qnn
+
+# widths, timing reps (the dense path at (4,5,4) runs 512-dim dense
+# sandwiches — one rep is plenty to resolve a multi-second round)
+WIDTH_SETS = (((2, 3, 2), 5), ((3, 4, 3), 3), ((4, 5, 4), 1))
+
+
+def time_round(cfg, params, ds, key, reps):
+    jax.block_until_ready(fed.server_round(params, ds, key, cfg))  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fed.server_round(params, ds, key, cfg))
+    return (time.perf_counter() - t0) / reps
+
+
+def main(rows=None, out_path: str = "BENCH_engine.json"):
+    rows = rows if rows is not None else []
+    print("# server_round wall time: dense full-space (seed) vs local "
+          "contractions")
+    results = []
+    for widths, reps in WIDTH_SETS:
+        key = jax.random.PRNGKey(0)
+        _, ds, _ = qdata.make_federated_dataset(key, widths[0], num_nodes=4,
+                                                n_per_node=4, n_test=4)
+        params = qnn.init_params(jax.random.PRNGKey(1), widths)
+        cfg = fed.QuantumFedConfig(widths=widths, num_nodes=4,
+                                   nodes_per_round=2, interval_length=2,
+                                   eps=0.05)
+        times = {}
+        for engine in ("local", "dense"):
+            times[engine] = time_round(cfg._replace(engine=engine), params,
+                                       ds, jax.random.PRNGKey(2), reps)
+        speedup = times["dense"] / times["local"]
+        name = "-".join(map(str, widths))
+        print(f"  widths={widths}  dense {times['dense']*1e3:9.2f} ms"
+              f"  local {times['local']*1e3:9.2f} ms  speedup {speedup:6.1f}x")
+        results.append({"widths": list(widths),
+                        "dense_ms": times["dense"] * 1e3,
+                        "local_ms": times["local"] * 1e3,
+                        "speedup": speedup})
+        rows.append((f"engine_round/{name}/local", times["local"] * 1e6,
+                     f"speedup={speedup:.1f}x"))
+        rows.append((f"engine_round/{name}/dense", times["dense"] * 1e6,
+                     "seed full-space path"))
+    if out_path:
+        payload = {"bench": "quantum_engine_server_round",
+                   "backend": jax.default_backend(),
+                   "config": {"num_nodes": 4, "nodes_per_round": 2,
+                              "interval_length": 2, "n_per_node": 4},
+                   "results": results}
+        with open(out_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"  wrote {out_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args()
+    main(out_path=args.out)

@@ -9,14 +9,15 @@ import argparse
 import sys
 import time
 
-from benchmarks import (ablation_noniid, bench_channel_noise, bench_lemma1,
-                        bench_qnn_scaling, bench_throughput, fig2_interval,
-                        fig3_noise)
+from benchmarks import (ablation_noniid, bench_channel_noise, bench_engine,
+                        bench_lemma1, bench_qnn_scaling, bench_throughput,
+                        fig2_interval, fig3_noise)
 
 SUITES = {
     "fig2": fig2_interval.main,
     "fig3": fig3_noise.main,
     "lemma1": bench_lemma1.main,
+    "engine": bench_engine.main,
     "qnn_scaling": bench_qnn_scaling.main,
     "throughput": bench_throughput.main,
     "ablation_noniid": ablation_noniid.main,

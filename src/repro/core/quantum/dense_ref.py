@@ -1,0 +1,130 @@
+"""Dense full-space reference path for the dissipative QNN.
+
+This is the seed implementation of the layer channel, adjoint channel
+and Proposition-1 update matrices: every perceptron unitary U^{l,j}
+(dim 2**(m_in+1)) is embedded into the full 2**(m_in+m_out) layer space
+and applied as a dense U rho U† sandwich. It is asymptotically slower
+than the local-contraction engine in ``qnn.py`` (which contracts each
+U^{l,j} directly on its acting qubit axes) and exists only as
+
+* the numerical oracle for ``tests/test_engine_equivalence.py`` — the
+  two engines must agree to <= 1e-10 under x64, and
+* the "old" side of ``benchmarks/bench_engine.py``.
+
+Reachable from training code via ``engine="dense"`` on
+``QuantumFedConfig`` / the qnn entry points.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantum import linalg as ql
+
+Params = List[jax.Array]
+
+
+def embedded_perceptrons(us: jax.Array, m_in: int, m_out: int) -> jax.Array:
+    """Embed each U^{l,j} into the full (m_in + m_out)-qubit space.
+
+    Returns a stacked array (m_out, D, D), D = 2**(m_in+m_out).
+    """
+    n = m_in + m_out
+    embedded = []
+    for j in range(m_out):
+        acting = list(range(m_in)) + [m_in + j]
+        embedded.append(ql.embed_unitary(us[j], acting, n))
+    return jnp.stack(embedded)
+
+
+def layer_forward(us: jax.Array, rho_in: jax.Array, m_in: int, m_out: int
+                  ) -> jax.Array:
+    """Apply the layer channel E^l to a (batched) density matrix."""
+    n = m_in + m_out
+    p0 = ql.zero_projector(m_out, dtype=rho_in.dtype)
+    full = jnp.einsum("...ab,cd->...acbd", rho_in, p0)
+    d = ql.dim(n)
+    full = full.reshape(rho_in.shape[:-2] + (d, d))
+    for u in embedded_perceptrons(us, m_in, m_out):
+        full = ql.apply_unitary(full, u)
+    return ql.partial_trace(full, keep=list(range(m_in, n)), n_qubits=n)
+
+
+def layer_adjoint(us: jax.Array, sigma: jax.Array, m_in: int, m_out: int
+                  ) -> jax.Array:
+    """Adjoint channel F^l: back-propagate sigma^l -> sigma^{l-1}.
+
+    F(Y) = (I ⊗ <0..0|) U† (I ⊗ Y) U (I ⊗ |0..0>)
+    """
+    n = m_in + m_out
+    d_in, d_out = ql.dim(m_in), ql.dim(m_out)
+    eye_in = jnp.eye(d_in, dtype=sigma.dtype)
+    full = jnp.einsum("ab,...cd->...acbd", eye_in, sigma)
+    full = full.reshape(sigma.shape[:-2] + (d_in * d_out, d_in * d_out))
+    embedded = embedded_perceptrons(us, m_in, m_out)
+    # U = U_m ... U_1  =>  U† X U = U_1† ... U_m† X U_m ... U_1.
+    for u in embedded[::-1]:
+        full = ql.apply_unitary(full, ql.dagger(u))
+    t = full.reshape(sigma.shape[:-2] + (d_in, d_out, d_in, d_out))
+    return t[..., :, 0, :, 0]
+
+
+def feedforward(params: Params, rho_in: jax.Array, widths: Sequence[int]
+                ) -> List[jax.Array]:
+    rhos = [rho_in]
+    for l in range(1, len(widths)):
+        rhos.append(layer_forward(params[l - 1], rhos[-1],
+                                  widths[l - 1], widths[l]))
+    return rhos
+
+
+def backward(params: Params, sigma_out: jax.Array, widths: Sequence[int]
+             ) -> List[jax.Array]:
+    L = len(widths) - 1
+    sigmas = [sigma_out]
+    for l in range(L, 0, -1):
+        sigmas.append(layer_adjoint(params[l - 1], sigmas[-1],
+                                    widths[l - 1], widths[l]))
+    return sigmas[::-1]
+
+
+def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
+                    widths: Sequence[int], eta) -> Params:
+    """Proposition 1 via the dense full-space sandwiches (seed path)."""
+    n_data = phi_in.shape[0]
+    rho_in = ql.pure_density(phi_in)
+    sigma_l = ql.pure_density(phi_out)
+    rhos = feedforward(params, rho_in, widths)
+    sigmas = backward(params, sigma_l, widths)
+
+    ks: Params = []
+    for l in range(1, len(widths)):
+        m_in, m_out = widths[l - 1], widths[l]
+        n = m_in + m_out
+        d_full = ql.dim(n)
+        embedded = embedded_perceptrons(params[l - 1], m_in, m_out)
+
+        p0 = ql.zero_projector(m_out, dtype=rho_in.dtype)
+        a = jnp.einsum("...ab,cd->...acbd", rhos[l - 1], p0)
+        a = a.reshape(rhos[l - 1].shape[:-2] + (d_full, d_full))
+        eye_in = jnp.eye(ql.dim(m_in), dtype=rho_in.dtype)
+        b = jnp.einsum("ab,...cd->...acbd", eye_in, sigmas[l])
+        b = b.reshape(sigmas[l].shape[:-2] + (d_full, d_full))
+        bs = [b]
+        for jj in range(m_out - 1, 0, -1):
+            b = ql.apply_unitary(b, ql.dagger(embedded[jj]))
+            bs.append(b)
+        bs = bs[::-1]
+
+        layer_ks = []
+        for j in range(m_out):
+            a = ql.apply_unitary(a, embedded[j])
+            m = a @ bs[j] - bs[j] @ a
+            keep = list(range(m_in)) + [m_in + j]
+            m_traced = ql.partial_trace(m, keep=keep, n_qubits=n)
+            k = (eta * (2.0 ** m_in) * 1j / n_data) * jnp.sum(m_traced, axis=0)
+            layer_ks.append(k)
+        ks.append(jnp.stack(layer_ks))
+    return ks

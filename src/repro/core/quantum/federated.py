@@ -12,6 +12,15 @@ Two aggregation modes are implemented:
 Lemma 1 guarantees the two agree to O(eps^2); ``tests/test_quantumfed.py``
 checks this, and that interval_length=1 + full participation reproduces
 centralized training exactly (§III-C).
+
+Engine dispatch: ``QuantumFedConfig.engine`` selects the QNN simulation
+path (``"local"`` tensor contractions, default; ``"dense"`` seed
+full-space reference) and ``QuantumFedConfig.impl`` the backend for the
+dense inner products (``"xla"`` default; ``"pallas"`` for the TPU
+kernels, interpret mode on CPU). Both update-unitary chains are rolled
+into ``jax.lax.scan`` (constant-size jit graph in N_p and I_l), and all
+N_p x I_l x m_l update unitaries of a layer are formed by a single
+batched ``expm_herm``.
 """
 from __future__ import annotations
 
@@ -38,10 +47,13 @@ class QuantumFedConfig(NamedTuple):
     # beyond-paper: relative Hermitian noise on uploaded update matrices
     # (hardware/channel imperfection; uploads stay exactly unitary)
     upload_noise: float = 0.0
+    engine: str = "local"             # "local" contractions | "dense" seed
+    impl: str = "xla"                 # "xla" | "pallas" inner products
 
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
-                key: jax.Array, cfg: QuantumFedConfig) -> List[jax.Array]:
+                key: jax.Array, eta, eps, cfg: QuantumFedConfig
+                ) -> List[jax.Array]:
     """QuanFedNode: I_l temporary-update steps on one node's local data.
 
     Returns the per-step update matrices K_{n,k}, stacked per layer as
@@ -59,8 +71,9 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
             b_in, b_out = phi_in[idx], phi_out[idx]
         else:
             b_in, b_out = phi_in, phi_out
-        ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, cfg.eta)
-        p = qnn.apply_updates(p, ks, cfg.eps)
+        ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
+                                 engine=cfg.engine, impl=cfg.impl)
+        p = qnn.apply_updates(p, ks, eps, impl=cfg.impl)
         return p, ks
 
     keys = jax.random.split(key, cfg.interval_length)
@@ -68,77 +81,96 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
     return ks_seq  # list per layer: (I_l, m_l, d, d)
 
 
+def _chain(us: jax.Array, upd: jax.Array, impl: str) -> jax.Array:
+    """acc <- upd[T-1] @ ... @ upd[0] @ us via lax.scan (upd: (T, m, d, d))."""
+    def body(acc, u):
+        return qnn.bmm(u, acc, impl=impl), None
+
+    acc, _ = jax.lax.scan(body, us, upd)
+    return acc
+
+
 def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
-                      weights: jax.Array, eps: float) -> qnn.Params:
+                      weights: jax.Array, eps, *, impl: str = "xla"
+                      ) -> qnn.Params:
     """Eq. 6: U^{l,j} = prod_{k=I_l}^{1} prod_{n} e^{i eps w_n K_{n,k}},
     then U_{t+1} = U^{l,j} U_t^{l,j}."""
-    n_nodes = weights.shape[0]
-    i_l = ks_all[0].shape[1]
     new_params = []
     for us, ks in zip(params, ks_all):
-        # ks: (N_p, I_l, m_l, d, d); scaled update unitaries per node/step.
-        upd = ql.expm_herm(ks * weights[:, None, None, None, None], eps)
-        acc = us
-        for k in range(i_l):
-            for n in range(n_nodes):
-                acc = jnp.einsum("jab,jbc->jac", upd[n, k], acc)
-        new_params.append(acc)
+        # ks: (N_p, I_l, m_l, d, d); one batched expm forms every scaled
+        # update unitary of the round at once (weights cast here only).
+        w = weights[:, None, None, None, None].astype(ks.dtype)
+        upd = ql.expm_herm(ks * w, eps)
+        # Eq. 6 application order: interval step k outermost (k=1 applied
+        # first), node n innermost — flatten to one scan sequence.
+        seq = jnp.swapaxes(upd, 0, 1).reshape((-1,) + upd.shape[2:])
+        new_params.append(_chain(us, seq, impl))
     return new_params
 
 
 def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
-                      weights: jax.Array, eps: float) -> qnn.Params:
+                      weights: jax.Array, eps, *, impl: str = "xla"
+                      ) -> qnn.Params:
     """Eq. 8: K_k = sum_n w_n K_{n,k};  U = prod_{k=I_l}^{1} e^{i eps K_k}."""
-    i_l = ks_all[0].shape[1]
     new_params = []
     for us, ks in zip(params, ks_all):
-        k_bar = jnp.einsum("n,nk...->k...", weights, ks)
+        k_bar = jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
         upd = ql.expm_herm(k_bar, eps)  # (I_l, m_l, d, d)
-        acc = us
-        for k in range(i_l):
-            acc = jnp.einsum("jab,jbc->jac", upd[k], acc)
-        new_params.append(acc)
+        new_params.append(_chain(us, upd, impl))
     return new_params
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
-def server_round(params: qnn.Params, dataset: QuantumDataset,
-                 key: jax.Array, cfg: QuantumFedConfig) -> qnn.Params:
-    """One QuanFedPS iteration: sample N_p nodes, run QuanFedNode on
-    each (vmapped), aggregate update unitaries into the global model."""
-    k_sel, k_node = jax.random.split(key)
+def _server_round(params: qnn.Params, dataset: QuantumDataset,
+                  key: jax.Array, eta, eps, cfg: QuantumFedConfig
+                  ) -> qnn.Params:
+    k_sel, k_node, k_noise = jax.random.split(key, 3)
     sel = jax.random.choice(k_sel, cfg.num_nodes, (cfg.nodes_per_round,),
                             replace=False)
     node_in = dataset.phi_in[sel]    # (N_p, N_n, d_in)
     node_out = dataset.phi_out[sel]  # (N_p, N_n, d_out)
     node_keys = jax.random.split(k_node, cfg.nodes_per_round)
 
-    ks_all = jax.vmap(node_update, in_axes=(None, 0, 0, 0, None))(
-        params, node_in, node_out, node_keys, cfg)
+    ks_all = jax.vmap(node_update, in_axes=(None, 0, 0, 0, None, None, None)
+                      )(params, node_in, node_out, node_keys, eta, eps, cfg)
 
     if cfg.upload_noise > 0.0:
         from repro.core.quantum.channel_noise import perturb_updates
-        k_noise = jax.random.fold_in(key, 0x6e6f6973)
         ks_all = perturb_updates(k_noise, ks_all, cfg.upload_noise)
 
-    # Data-volume weights N_n / N_t (equal-sized nodes here, but kept
-    # general so unequal splits work too).
+    # Data-volume weights N_n / N_t, kept real (equal-sized nodes here,
+    # but general so unequal splits work too); the aggregators cast to
+    # the complex state dtype only where the K's are scaled.
     n_n = jnp.full((cfg.nodes_per_round,), node_in.shape[1], jnp.float32)
-    weights = (n_n / jnp.sum(n_n)).astype(dataset.phi_in.dtype)
+    weights = n_n / jnp.sum(n_n)
 
     if cfg.aggregation == "product":
-        return aggregate_product(params, ks_all, weights, cfg.eps)
+        return aggregate_product(params, ks_all, weights, eps, impl=cfg.impl)
     elif cfg.aggregation == "average":
-        return aggregate_average(params, ks_all, weights, cfg.eps)
+        return aggregate_average(params, ks_all, weights, eps, impl=cfg.impl)
     raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("widths",))
+def server_round(params: qnn.Params, dataset: QuantumDataset,
+                 key: jax.Array, cfg: QuantumFedConfig) -> qnn.Params:
+    """One QuanFedPS iteration: sample N_p nodes, run QuanFedNode on
+    each (vmapped), aggregate update unitaries into the global model.
+
+    eta/eps are split out of cfg and traced so hyperparameter sweeps
+    reuse one compiled round; the structural fields stay static.
+    """
+    static_cfg = cfg._replace(eta=0.0, eps=0.0)
+    return _server_round(params, dataset, key, cfg.eta, cfg.eps, static_cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("widths", "impl"))
 def evaluate(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
-             widths: Tuple[int, ...]) -> Dict[str, jax.Array]:
+             widths: Tuple[int, ...], impl: str = "xla"
+             ) -> Dict[str, jax.Array]:
     rho_out = qnn.outputs(params, phi_in, widths)
     return {
-        "fidelity": jnp.mean(ql.fidelity_pure(phi_out, rho_out)),
+        "fidelity": jnp.mean(qnn.batched_fidelity(phi_out, rho_out,
+                                                  impl=impl)),
         "mse": jnp.mean(ql.mse_state(phi_out, rho_out)),
     }
 
@@ -162,8 +194,8 @@ def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
     }
 
     def record(t, p):
-        tr = evaluate(p, train_in, train_out, cfg.widths)
-        te = evaluate(p, test_in, test_out, cfg.widths)
+        tr = evaluate(p, train_in, train_out, cfg.widths, impl=cfg.impl)
+        te = evaluate(p, test_in, test_out, cfg.widths, impl=cfg.impl)
         history["iteration"].append(t)
         history["train_fidelity"].append(float(tr["fidelity"]))
         history["train_mse"].append(float(tr["mse"]))

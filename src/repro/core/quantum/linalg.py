@@ -6,10 +6,19 @@ either pure (column vectors, shape (2**n,)) or density matrices
 
 Convention: qubit 0 is the MOST significant axis, i.e. a state tensor is
 reshaped as (2,)*n with axis q corresponding to qubit q.
+
+Local-contraction convention: a k-qubit operator u acting on qubit
+subset ``acting`` is applied to a density matrix without ever being
+embedded into the full 2**n space — ``apply_unitary_local`` reshapes the
+state to its (2,)*2n tensor form and contracts u (resp. u*) directly on
+the row (resp. column) axes of the acting qubits. ``embed_unitary`` +
+``apply_unitary`` remain as the dense reference path
+(``repro.core.quantum.dense_ref``).
 """
 from __future__ import annotations
 
 import functools
+import string
 from typing import Sequence
 
 import jax
@@ -93,6 +102,55 @@ def apply_unitary(rho: jax.Array, u: jax.Array) -> jax.Array:
     return jnp.einsum("ab,...bc,dc->...ad", u, rho, jnp.conjugate(u))
 
 
+def apply_unitary_local(rho: jax.Array, u: jax.Array,
+                        acting_on: Sequence[int], n_qubits: int
+                        ) -> jax.Array:
+    """U rho U† where u acts only on the qubit subset `acting_on`.
+
+    u has shape (2**k, 2**k) with k == len(acting_on); `acting_on` lists
+    qubit indices in the order of u's tensor factors. rho may carry
+    leading batch axes. Contracts u on the row axes and conj(u) on the
+    column axes of the (2,)*2n tensor form — cost O(2**(n+k)) per batch
+    element instead of the O(2**(2n)·2**n) dense sandwich, and no
+    2**n × 2**n embedded operator is ever materialized.
+    """
+    k = len(acting_on)
+    assert u.shape[-1] == dim(k), (u.shape, acting_on)
+    batch = rho.shape[:-2]
+    nb = len(batch)
+    u_t = u.reshape(_qubit_axes(k) * 2)
+    t = rho.reshape(batch + _qubit_axes(n_qubits) * 2)
+    # (U rho U†)_{ab} = U_{ai} rho_{ij} conj(U)_{bj}
+    row_axes = [nb + q for q in acting_on]
+    t = jnp.tensordot(u_t, t, axes=(list(range(k, 2 * k)), row_axes))
+    t = jnp.moveaxis(t, list(range(k)), row_axes)
+    col_axes = [nb + n_qubits + q for q in acting_on]
+    t = jnp.tensordot(jnp.conjugate(u_t), t,
+                      axes=(list(range(k, 2 * k)), col_axes))
+    t = jnp.moveaxis(t, list(range(k)), col_axes)
+    return t.reshape(rho.shape)
+
+
+def apply_unitary_vec(psi: jax.Array, u: jax.Array,
+                      acting_on: Sequence[int], n_qubits: int) -> jax.Array:
+    """U |psi> where u acts only on the qubit subset `acting_on`.
+
+    psi: (..., 2**n) state vector(s); u: (2**k, 2**k), k == len(acting_on).
+    The vector analogue of ``apply_unitary_local`` — cost O(2**(n-k)·4**k)
+    per batch element.
+    """
+    k = len(acting_on)
+    assert u.shape[-1] == dim(k), (u.shape, acting_on)
+    batch = psi.shape[:-1]
+    nb = len(batch)
+    u_t = u.reshape(_qubit_axes(k) * 2)
+    t = psi.reshape(batch + _qubit_axes(n_qubits))
+    axes = [nb + q for q in acting_on]
+    t = jnp.tensordot(u_t, t, axes=(list(range(k, 2 * k)), axes))
+    t = jnp.moveaxis(t, list(range(k)), axes)
+    return t.reshape(psi.shape)
+
+
 def partial_trace(rho: jax.Array, keep: Sequence[int], n_qubits: int) -> jax.Array:
     """Trace out all qubits except `keep` (ordered). Supports a single
     leading batch axis via vmap-friendly pure reshapes.
@@ -122,6 +180,41 @@ def partial_trace(rho: jax.Array, keep: Sequence[int], n_qubits: int) -> jax.Arr
         )
         out = tt.reshape(batch_shape + (d, d))
     return out
+
+
+def ensemble_trace_product(v: jax.Array, w: jax.Array, keep: Sequence[int],
+                           n_qubits: int) -> jax.Array:
+    """Partially-traced rank-1 sum: T = tr_rest( sum_e |v_e><conj(w_e)| ).
+
+    v, w: (..., 2**n) with identical leading (ensemble/batch) axes, all of
+    which are SUMMED. Returns T of shape (2**k, 2**k), k == len(keep),
+    with row/column tensor factors in `keep` order:
+
+        T[a, b] = sum_e sum_r v_e[(a, r)] w_e[(b, r)]
+
+    With w_e = v_e† B this is tr_rest( (sum_e v_e v_e†) B ) without ever
+    forming the 2**n x 2**n product — the Prop.-1 commutator trick
+    (A, B Hermitian => tr_rest[A, B] = T - T†).
+    """
+    keep = list(keep)
+    letters = string.ascii_letters
+    e = letters[0]
+    qa, qw = {}, {}
+    idx = 1
+    for q in range(n_qubits):
+        if q in keep:
+            qa[q], qw[q] = letters[idx], letters[idx + 1]
+            idx += 2
+        else:
+            qa[q] = qw[q] = letters[idx]
+            idx += 1
+    sub_v = e + "".join(qa[q] for q in range(n_qubits))
+    sub_w = e + "".join(qw[q] for q in range(n_qubits))
+    out = ("".join(qa[q] for q in keep) + "".join(qw[q] for q in keep))
+    vt = v.reshape((-1,) + _qubit_axes(n_qubits))
+    wt = w.reshape((-1,) + _qubit_axes(n_qubits))
+    d = dim(len(keep))
+    return jnp.einsum(f"{sub_v},{sub_w}->{out}", vt, wt).reshape(d, d)
 
 
 def haar_state(key: jax.Array, n_qubits: int, batch: tuple = (),

@@ -11,6 +11,18 @@ channel is
 
 Parameters are a list (one per layer) of stacked unitaries with shape
 ``(m_l, 2**(m_{l-1}+1), 2**(m_{l-1}+1))``.
+
+Engine convention: the default ``engine="local"`` path never embeds a
+perceptron into the full 2**(m_in+m_out) layer space — each U^{l,j} is
+contracted directly on its acting qubit axes
+(``linalg.apply_unitary_local``), turning every dense D x D sandwich
+(D = 2**(m_in+m_out)) into a D x 2**(m_in+1) tensor contraction.
+``engine="dense"`` routes to the seed full-space reference
+(``dense_ref``) kept for equivalence tests and benchmarks. Orthogonally,
+``impl`` selects the backend for the remaining genuinely-dense inner
+products (Prop.-1 commutators, update application, fidelity):
+``"xla"`` (default, einsum) or ``"pallas"`` (the TPU kernels in
+``repro.kernels``; interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -20,13 +32,46 @@ from typing import List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantum import dense_ref
 from repro.core.quantum import linalg as ql
+from repro.kernels import ops as kops
 
 Params = List[jax.Array]
 
 
 def perceptron_dim(m_in: int) -> int:
     return ql.dim(m_in + 1)
+
+
+def _acting(m_in: int, j: int) -> List[int]:
+    """Qubit axes perceptron j touches: all inputs plus output qubit j."""
+    return list(range(m_in)) + [m_in + j]
+
+
+def bmm(a: jax.Array, b: jax.Array, *, impl: str = "xla") -> jax.Array:
+    """Batched complex matmul a @ b with kernel dispatch.
+
+    a: (..., M, K), b: (..., K, N) with identical leading batch axes.
+    impl="pallas" flattens the batch and routes through the zgemm
+    Pallas kernel (interpret mode off-TPU); impl="xla" is plain matmul.
+    """
+    if impl == "xla":
+        return a @ b
+    batch = a.shape[:-2]
+    out = kops.complex_matmul(a.reshape((-1,) + a.shape[-2:]),
+                              b.reshape((-1,) + b.shape[-2:]), impl=impl)
+    return out.reshape(batch + out.shape[-2:])
+
+
+def batched_fidelity(phi: jax.Array, rho: jax.Array, *, impl: str = "xla"
+                     ) -> jax.Array:
+    """<phi| rho |phi> with kernel dispatch (batched over leading axes)."""
+    if impl == "xla":
+        return ql.fidelity_pure(phi, rho)
+    batch = phi.shape[:-1]
+    out = kops.fidelity(phi.reshape((-1,) + phi.shape[-1:]),
+                        rho.reshape((-1,) + rho.shape[-2:]), impl=impl)
+    return out.reshape(batch)
 
 
 def init_params(key: jax.Array, widths: Sequence[int],
@@ -42,19 +87,6 @@ def init_params(key: jax.Array, widths: Sequence[int],
     return params
 
 
-def _embedded_perceptrons(us: jax.Array, m_in: int, m_out: int) -> jax.Array:
-    """Embed each U^{l,j} into the full (m_in + m_out)-qubit space.
-
-    Returns a stacked array (m_out, D, D), D = 2**(m_in+m_out).
-    """
-    n = m_in + m_out
-    embedded = []
-    for j in range(m_out):
-        acting = list(range(m_in)) + [m_in + j]
-        embedded.append(ql.embed_unitary(us[j], acting, n))
-    return jnp.stack(embedded)
-
-
 def layer_forward(us: jax.Array, rho_in: jax.Array, m_in: int, m_out: int
                   ) -> jax.Array:
     """Apply the layer channel E^l to a (batched) density matrix."""
@@ -63,8 +95,8 @@ def layer_forward(us: jax.Array, rho_in: jax.Array, m_in: int, m_out: int
     full = jnp.einsum("...ab,cd->...acbd", rho_in, p0)
     d = ql.dim(n)
     full = full.reshape(rho_in.shape[:-2] + (d, d))
-    for u in _embedded_perceptrons(us, m_in, m_out):
-        full = ql.apply_unitary(full, u)
+    for j in range(m_out):
+        full = ql.apply_unitary_local(full, us[j], _acting(m_in, j), n)
     return ql.partial_trace(full, keep=list(range(m_in, n)), n_qubits=n)
 
 
@@ -76,15 +108,13 @@ def layer_adjoint(us: jax.Array, sigma: jax.Array, m_in: int, m_out: int
     """
     n = m_in + m_out
     d_in, d_out = ql.dim(m_in), ql.dim(m_out)
-    # (I_in ⊗ Y) in full space
     eye_in = jnp.eye(d_in, dtype=sigma.dtype)
     full = jnp.einsum("ab,...cd->...acbd", eye_in, sigma)
     full = full.reshape(sigma.shape[:-2] + (d_in * d_out, d_in * d_out))
-    embedded = _embedded_perceptrons(us, m_in, m_out)
-    # U = U_m ... U_1  =>  U† (·) U applied as successive sandwiches,
-    # outermost factor first: U† X U = U_1† ... U_m† X U_m ... U_1.
-    for u in embedded[::-1]:
-        full = ql.apply_unitary(full, ql.dagger(u))
+    # U = U_m ... U_1  =>  U† X U = U_1† ... U_m† X U_m ... U_1.
+    for j in range(m_out - 1, -1, -1):
+        full = ql.apply_unitary_local(full, ql.dagger(us[j]),
+                                      _acting(m_in, j), n)
     # Sandwich with (I ⊗ |0..0>): select the out-block 0,0.
     t = full.reshape(sigma.shape[:-2] + (d_in, d_out, d_in, d_out))
     return t[..., :, 0, :, 0]
@@ -111,8 +141,45 @@ def backward(params: Params, sigma_out: jax.Array, widths: Sequence[int]
     return sigmas[::-1]
 
 
+def _append_ancilla(v: jax.Array, m_out: int) -> jax.Array:
+    """|v> ⊗ |0..0>_{m_out} for ensemble vectors v: (..., d_in)."""
+    d_out = ql.dim(m_out)
+    full = jnp.zeros(v.shape + (d_out,), v.dtype)
+    return full.at[..., 0].set(v).reshape(v.shape[:-1] + (-1,))
+
+
+def feedforward_ensemble(params: Params, phi_in: jax.Array,
+                         widths: Sequence[int]) -> List[jax.Array]:
+    """Propagate pure inputs as unnormalized state-vector ensembles.
+
+    Returns [v^0, ..., v^L] with v^l of shape (..., E_l, 2**m_l) and
+    rho^l = sum_e v^l_e v^l_e†, E_l = 2**(m_0+...+m_{l-1}). Each layer
+    appends the |0..0> ancilla, applies the perceptron unitaries to the
+    VECTORS (local contractions on a 2**n-vector instead of a
+    2**n x 2**n operator), and folds the traced-out input factor into
+    the ensemble axis — the partial trace costs nothing.
+    """
+    vs = [phi_in[..., None, :]]  # E_0 = 1
+    for l in range(1, len(widths)):
+        m_in, m_out = widths[l - 1], widths[l]
+        n = m_in + m_out
+        w = _append_ancilla(vs[-1], m_out)
+        for j in range(m_out):
+            w = ql.apply_unitary_vec(w, params[l - 1][j], _acting(m_in, j), n)
+        # tr_in: ensemble over the input factor.
+        w = w.reshape(w.shape[:-1] + (ql.dim(m_in), ql.dim(m_out)))
+        vs.append(w.reshape(w.shape[:-3] + (-1, ql.dim(m_out))))
+    return vs
+
+
+def density_from_ensemble(v: jax.Array) -> jax.Array:
+    """rho = sum_e v_e v_e† for ensembles v: (..., E, d)."""
+    return jnp.einsum("...ed,...ec->...dc", v, jnp.conjugate(v))
+
+
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
-                    widths: Sequence[int], eta: float) -> Params:
+                    widths: Sequence[int], eta, *, engine: str = "local",
+                    impl: str = "xla") -> Params:
     """Proposition 1: closed-form Hermitian update matrices K^{l,j}.
 
         K_j^l = eta * 2^{m_{l-1}} * i / N * sum_x tr_rest M_x^{l,j}
@@ -121,83 +188,104 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     where A is the partially-applied forward state and B the partially
     back-propagated label, both in the (m_{l-1}+m_l)-qubit layer space.
 
+    The local engine exploits the problem structure instead of forming
+    full-space products: A = sum_e v_e v_e† stays an ensemble of
+    vectors (inputs are pure, so rank(rho^{l-1}) <= 2**m_{l-1}), the
+    B_j are peeled with local contractions, sigma^{l-1} is read off the
+    fully-peeled B chain (no separate adjoint pass), and since A and B
+    are Hermitian the commutator trace is tr_rest[A,B] = T - T† with
+    T = tr_rest(A B_j) contracted directly from v, v†B_j
+    (``linalg.ensemble_trace_product``). The v†B_j products are the one
+    dense step left and go through ``bmm``/``impl``.
+
     phi_in:  (N, 2**m_0) pure input states
     phi_out: (N, 2**m_L) pure label states
     Returns a list like params of stacked K's (m_l, d, d).
     """
-    n_data = phi_in.shape[0]
-    rho_in = ql.pure_density(phi_in)
-    sigma_l = ql.pure_density(phi_out)
-    rhos = feedforward(params, rho_in, widths)
-    sigmas = backward(params, sigma_l, widths)
+    if engine == "dense":
+        return dense_ref.update_matrices(params, phi_in, phi_out, widths,
+                                         eta)
+    if engine != "local":
+        raise ValueError(f"unknown engine {engine!r}")
 
-    ks: Params = []
-    for l in range(1, len(widths)):
+    n_data = phi_in.shape[0]
+    vs = feedforward_ensemble(params, phi_in, widths)
+    sigma = ql.pure_density(phi_out)  # sigma^L, updated as we descend
+
+    ks_rev: Params = []
+    for l in range(len(widths) - 1, 0, -1):
+        us = params[l - 1]
         m_in, m_out = widths[l - 1], widths[l]
         n = m_in + m_out
-        d_full = ql.dim(n)
-        embedded = _embedded_perceptrons(params[l - 1], m_in, m_out)
+        d_in, d_out = ql.dim(m_in), ql.dim(m_out)
 
-        # A_0 = rho^{l-1} ⊗ |0..0><0..0|
-        p0 = ql.zero_projector(m_out, dtype=rho_in.dtype)
-        a = jnp.einsum("...ab,cd->...acbd", rhos[l - 1], p0)
-        a = a.reshape(rhos[l - 1].shape[:-2] + (d_full, d_full))
-        # B_{m_out} = I_{in} ⊗ sigma^l ; build then peel U's downward.
-        eye_in = jnp.eye(ql.dim(m_in), dtype=rho_in.dtype)
-        b = jnp.einsum("ab,...cd->...acbd", eye_in, sigmas[l])
-        b = b.reshape(sigmas[l].shape[:-2] + (d_full, d_full))
-        # Pre-compute B_j for j = m_out..1:
+        # B_{m_out} = I_{in} ⊗ sigma^l ; peel U's downward:
         #   B_j = U_{j+1}† ... U_m† (I⊗sigma) U_m ... U_{j+1}
+        eye_in = jnp.eye(d_in, dtype=sigma.dtype)
+        b = jnp.einsum("ab,...cd->...acbd", eye_in, sigma)
+        b = b.reshape(sigma.shape[:-2] + (d_in * d_out, d_in * d_out))
         bs = [b]  # index: bs[0] corresponds to j = m_out
         for jj in range(m_out - 1, 0, -1):
-            b = ql.apply_unitary(b, ql.dagger(embedded[jj]))
+            b = ql.apply_unitary_local(b, ql.dagger(us[jj]),
+                                       _acting(m_in, jj), n)
             bs.append(b)
         bs = bs[::-1]  # bs[j-1] is B_j
 
+        # A chain as ensemble vectors: A_j = sum_e |a_e,j><a_e,j| with
+        # a_j = U_j ... U_1 (v^{l-1} ⊗ |0..0>).
+        av = _append_ancilla(vs[l - 1], m_out)  # (N, E, 2**n)
         layer_ks = []
         for j in range(m_out):
-            # A_j = U_j ... U_1 (rho ⊗ P0) U_1† ... U_j†
-            a = ql.apply_unitary(a, embedded[j])
-            m = a @ bs[j] - bs[j] @ a  # commutator [A_j, B_j]
-            keep = list(range(m_in)) + [m_in + j]
-            m_traced = ql.partial_trace(m, keep=keep, n_qubits=n)
-            k = (eta * (2.0 ** m_in) * 1j / n_data) * jnp.sum(m_traced, axis=0)
+            av = ql.apply_unitary_vec(av, us[j], _acting(m_in, j), n)
+            w = bmm(jnp.conjugate(av), bs[j], impl=impl)  # av† B_j
+            t = ql.ensemble_trace_product(av, w, _acting(m_in, j), n)
+            k = (eta * (2.0 ** m_in) * 1j / n_data) * (t - ql.dagger(t))
             layer_ks.append(k)
-        ks.append(jnp.stack(layer_ks))
-    return ks
+        ks_rev.append(jnp.stack(layer_ks))
+
+        # sigma^{l-1} = (I⊗<0..0|) B_0 (I⊗|0..0>), B_0 = U_1† B_1 U_1 —
+        # the backward pass folded into the B chain.
+        if l > 1:
+            b0 = ql.apply_unitary_local(bs[0], ql.dagger(us[0]),
+                                        _acting(m_in, 0), n)
+            t4 = b0.reshape(b0.shape[:-2] + (d_in, d_out, d_in, d_out))
+            sigma = t4[..., :, 0, :, 0]
+    return ks_rev[::-1]
 
 
-def apply_updates(params: Params, ks: Params, eps: float) -> Params:
+def apply_updates(params: Params, ks: Params, eps, *, impl: str = "xla"
+                  ) -> Params:
     """Temporary update step: U^{l,j} <- e^{i eps K_j^l} U^{l,j}."""
     new_params = []
     for us, k in zip(params, ks):
         upd = ql.expm_herm(k, eps)
-        new_params.append(jnp.einsum("jab,jbc->jac", upd, us))
+        new_params.append(bmm(upd, us, impl=impl))
     return new_params
 
 
-def update_unitaries(ks: Params, scale: float) -> Params:
+def update_unitaries(ks: Params, scale) -> Params:
     """The unitaries a node uploads: U_{n,k}^{l,j} = e^{i eps (N_n/N_t) K}."""
     return [ql.expm_herm(k, scale) for k in ks]
 
 
-def apply_unitary_updates(params: Params, updates: Params) -> Params:
+def apply_unitary_updates(params: Params, updates: Params, *,
+                          impl: str = "xla") -> Params:
     """Left-multiply stacked per-perceptron unitaries onto the params."""
-    return [jnp.einsum("jab,jbc->jac", u, p) for u, p in zip(updates, params)]
+    return [bmm(u, p, impl=impl) for u, p in zip(updates, params)]
 
 
 def outputs(params: Params, phi_in: jax.Array, widths: Sequence[int]
             ) -> jax.Array:
-    """rho^out for a batch of pure input states."""
-    rho_in = ql.pure_density(phi_in)
-    return feedforward(params, rho_in, widths)[-1]
+    """rho^out for a batch of pure input states (ensemble fast path)."""
+    return density_from_ensemble(
+        feedforward_ensemble(params, phi_in, widths)[-1])
 
 
 def cost_fidelity(params: Params, phi_in: jax.Array, phi_out: jax.Array,
-                  widths: Sequence[int]) -> jax.Array:
+                  widths: Sequence[int], *, impl: str = "xla") -> jax.Array:
     """Eq. 3: mean fidelity <phi_out| rho_out |phi_out> over the batch."""
     rho_out = outputs(params, phi_in, widths)
-    return jnp.mean(ql.fidelity_pure(phi_out, rho_out))
+    return jnp.mean(batched_fidelity(phi_out, rho_out, impl=impl))
 
 
 def cost_mse(params: Params, phi_in: jax.Array, phi_out: jax.Array,
@@ -207,10 +295,15 @@ def cost_mse(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     return jnp.mean(ql.mse_state(phi_out, rho_out))
 
 
-@functools.partial(jax.jit, static_argnames=("widths", "eta", "eps"))
+@functools.partial(jax.jit, static_argnames=("widths", "engine", "impl"))
 def local_step(params: Params, phi_in: jax.Array, phi_out: jax.Array,
-               widths: Tuple[int, ...], eta: float, eps: float
-               ) -> Tuple[Params, Params]:
-    """One QuanFedNode temporary-update step. Returns (new_params, Ks)."""
-    ks = update_matrices(params, phi_in, phi_out, widths, eta)
-    return apply_updates(params, ks, eps), ks
+               widths: Tuple[int, ...], eta, eps, *, engine: str = "local",
+               impl: str = "xla") -> Tuple[Params, Params]:
+    """One QuanFedNode temporary-update step. Returns (new_params, Ks).
+
+    eta/eps are traced operands (no recompile on hyperparameter sweeps);
+    only widths/engine/impl are static.
+    """
+    ks = update_matrices(params, phi_in, phi_out, widths, eta,
+                         engine=engine, impl=impl)
+    return apply_updates(params, ks, eps, impl=impl), ks

@@ -1,0 +1,47 @@
+"""Optional-hypothesis shim for the property tests.
+
+The container does not ship ``hypothesis`` (and tier-1 must not install
+anything), but half the quantum test files mix property tests with plain
+deterministic ones. Importing ``given``/``settings``/``st`` from here
+keeps the deterministic tests collectable everywhere: with hypothesis
+installed the real decorators are re-exported; without it, ``@given``
+turns the test into a skip and the ``st`` strategy stubs swallow their
+arguments so decorator lines still evaluate.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised in the bare container
+    HAVE_HYPOTHESIS = False
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        # Replace the test body outright: a plain skip mark would leave
+        # pytest trying to resolve the strategy kwargs as fixtures.
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    class _Strategy:
+        """Inert stand-in for a hypothesis strategy object."""
+
+        def __repr__(self):
+            return "<stub strategy>"
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def _stub(*args, **kwargs):
+            return _Strategy()
+
+        integers = floats = lists = sampled_from = data = booleans = _stub
+        tuples = one_of = just = text = _stub

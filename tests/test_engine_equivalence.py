@@ -1,0 +1,163 @@
+"""Engine equivalence gates for the quantum simulation rebuild.
+
+Two independent axes are gated here:
+
+* engine: the local-contraction path (default) must reproduce the seed
+  dense full-space path (``dense_ref``) to <= 1e-10 under x64 for the
+  layer channel, its adjoint, the Prop.-1 update matrices, and a full
+  federated server round — over randomized widths and seeds.
+* impl: ``"pallas"`` (zgemm / fidelity kernels, interpret mode on this
+  CPU container) must match ``"xla"`` wherever it is wired into the qnn
+  path. The kernels accumulate in f32, so this gate is at kernel
+  tolerance, not 1e-10.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantum import dense_ref
+from repro.core.quantum import federated as fed
+from repro.core.quantum import linalg as ql, qnn
+from repro.core.quantum import data as qdata
+
+WIDTH_CASES = [(2, 3, 2), (1, 2, 1), (3, 2, 3), (2, 2, 2, 2)]
+
+
+def _rand_problem(seed, widths, n=5):
+    key = jax.random.PRNGKey(seed)
+    kp, ki, ko = jax.random.split(key, 3)
+    params = qnn.init_params(kp, widths)
+    phi_in = ql.haar_state(ki, widths[0], (n,))
+    phi_out = ql.haar_state(ko, widths[-1], (n,))
+    return params, phi_in, phi_out
+
+
+def _max_err(xs, ys):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(xs, ys))
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+@pytest.mark.parametrize("seed", [0, 17])
+def test_layer_channels_match_dense(x64, widths, seed):
+    params, phi_in, phi_out = _rand_problem(seed, widths)
+    rho = ql.pure_density(phi_in)
+    sig = ql.pure_density(phi_out)
+    for l in range(len(widths) - 1):
+        m_in, m_out = widths[l], widths[l + 1]
+        new = qnn.layer_forward(params[l], rho, m_in, m_out)
+        old = dense_ref.layer_forward(params[l], rho, m_in, m_out)
+        assert _max_err([new], [old]) <= 1e-10
+        rho = new
+    for l in range(len(widths) - 2, -1, -1):
+        m_in, m_out = widths[l], widths[l + 1]
+        new = qnn.layer_adjoint(params[l], sig, m_in, m_out)
+        old = dense_ref.layer_adjoint(params[l], sig, m_in, m_out)
+        assert _max_err([new], [old]) <= 1e-10
+        sig = new
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+def test_backward_matches_dense(x64, widths):
+    params, _, phi_out = _rand_problem(31, widths)
+    sigma = ql.pure_density(phi_out)
+    new = qnn.backward(params, sigma, widths)
+    old = dense_ref.backward(params, sigma, widths)
+    assert _max_err(new, old) <= 1e-10
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+@pytest.mark.parametrize("seed", [3, 23])
+def test_update_matrices_match_dense(x64, widths, seed):
+    params, phi_in, phi_out = _rand_problem(seed, widths)
+    new = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0)
+    old = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                              engine="dense")
+    assert _max_err(new, old) <= 1e-10
+
+
+@pytest.mark.parametrize("widths", [(2, 3, 2), (1, 2, 1)])
+def test_local_step_matches_dense(x64, widths):
+    params, phi_in, phi_out = _rand_problem(5, widths)
+    p_new, ks_new = qnn.local_step(params, phi_in, phi_out, widths, 1.0, 0.1)
+    p_old, ks_old = qnn.local_step(params, phi_in, phi_out, widths, 1.0, 0.1,
+                                   engine="dense")
+    assert _max_err(ks_new, ks_old) <= 1e-10
+    assert _max_err(p_new, p_old) <= 1e-10
+
+
+@pytest.mark.parametrize("aggregation", ["product", "average"])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_server_round_matches_dense(x64, aggregation, impl):
+    """Full federated round: local engine (both impls, through the
+    vmapped node pass and the lax.scan aggregation chain) vs the seed
+    dense path. The pallas kernels accumulate in f32, so that impl is
+    gated at kernel tolerance."""
+    widths = (2, 3, 2)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(11), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(12), widths)
+    outs = {}
+    for engine in ("local", "dense"):
+        cfg = fed.QuantumFedConfig(widths=widths, num_nodes=4,
+                                   nodes_per_round=4, interval_length=2,
+                                   eps=0.05, aggregation=aggregation,
+                                   engine=engine,
+                                   impl=impl if engine == "local" else "xla")
+        outs[engine] = fed.server_round(params, ds, jax.random.PRNGKey(13),
+                                        cfg)
+    tol = 1e-10 if impl == "xla" else 1e-5
+    assert _max_err(outs["local"], outs["dense"]) <= tol
+
+
+def test_local_step_no_recompile_on_hyperparams():
+    """eta/eps are traced operands: sweeping them must hit one trace."""
+    widths = (2, 2)
+    params, phi_in, phi_out = _rand_problem(9, widths)
+    qnn.local_step.clear_cache()
+    for eta, eps in ((1.0, 0.1), (0.5, 0.2), (2.0, 0.01)):
+        jax.block_until_ready(
+            qnn.local_step(params, phi_in, phi_out, widths, eta, eps)[0])
+    assert qnn.local_step._cache_size() == 1
+
+
+# ---------------------------------------------------------------- pallas
+def test_bmm_pallas_matches_xla(x64):
+    key = jax.random.PRNGKey(2)
+    a = ql.haar_unitary(key, 8, batch=(3, 2))
+    b = ql.haar_unitary(jax.random.fold_in(key, 1), 8, batch=(3, 2))
+    out_p = qnn.bmm(a, b, impl="pallas")
+    out_x = qnn.bmm(a, b, impl="xla")
+    assert out_p.shape == out_x.shape == (3, 2, 8, 8)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_x),
+                               atol=1e-5)
+
+
+def test_batched_fidelity_pallas_matches_xla(x64):
+    key = jax.random.PRNGKey(4)
+    phi = ql.haar_state(key, 3, (2, 5))
+    rho = ql.pure_density(ql.haar_state(jax.random.fold_in(key, 1), 3,
+                                        (2, 5)))
+    f_p = qnn.batched_fidelity(phi, rho, impl="pallas")
+    f_x = qnn.batched_fidelity(phi, rho, impl="xla")
+    assert f_p.shape == (2, 5)
+    np.testing.assert_allclose(np.asarray(f_p), np.asarray(f_x), atol=1e-5)
+
+
+def test_update_matrices_pallas_matches_xla(x64):
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(6, widths)
+    ks_p = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                               impl="pallas")
+    ks_x = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                               impl="xla")
+    assert _max_err(ks_p, ks_x) <= 1e-5
+
+
+def test_cost_fidelity_pallas_matches_xla(x64):
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(8, widths)
+    f_p = qnn.cost_fidelity(params, phi_in, phi_out, widths, impl="pallas")
+    f_x = qnn.cost_fidelity(params, phi_in, phi_out, widths, impl="xla")
+    np.testing.assert_allclose(float(f_p), float(f_x), atol=1e-5)

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (not in container)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.quantum import linalg as ql, qnn
 from repro.kernels import ref

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core.quantum import linalg as ql
 
@@ -94,6 +94,46 @@ def test_embed_unitary_disjoint_commute():
     u2 = ql.embed_unitary(ql.haar_unitary(k2, 2), [2], 3)
     np.testing.assert_allclose(np.asarray(u1 @ u2), np.asarray(u2 @ u1),
                                atol=1e-5)
+
+
+def test_apply_unitary_local_matches_embed():
+    """Local contraction == dense embedded sandwich, any acting order."""
+    key = jax.random.PRNGKey(21)
+    u = ql.haar_unitary(key, 4)  # two-qubit unitary
+    psi = ql.haar_state(jax.random.fold_in(key, 1), 3, batch=(2,))
+    rho = ql.pure_density(psi)
+    for acting in ([0, 1], [1, 2], [0, 2], [2, 0]):
+        dense = ql.apply_unitary(rho, ql.embed_unitary(u, acting, 3))
+        local = ql.apply_unitary_local(rho, u, acting, 3)
+        np.testing.assert_allclose(np.asarray(local), np.asarray(dense),
+                                   atol=1e-5)
+
+
+def test_apply_unitary_vec_matches_embed():
+    key = jax.random.PRNGKey(22)
+    u = ql.haar_unitary(key, 4)
+    psi = ql.haar_state(jax.random.fold_in(key, 1), 3, batch=(4,))
+    for acting in ([0, 2], [1, 2], [2, 1]):
+        full = ql.embed_unitary(u, acting, 3)
+        dense = jnp.einsum("ab,xb->xa", full, psi)
+        local = ql.apply_unitary_vec(psi, u, acting, 3)
+        np.testing.assert_allclose(np.asarray(local), np.asarray(dense),
+                                   atol=1e-5)
+
+
+def test_ensemble_trace_product_matches_dense():
+    """T == tr_rest((sum_e v v†) B) formed the slow dense way."""
+    key = jax.random.PRNGKey(23)
+    v = ql.haar_state(key, 3, batch=(5,))
+    z = ql.haar_unitary(jax.random.fold_in(key, 1), 8)
+    b = z + ql.dagger(z)  # Hermitian operator
+    w = jnp.einsum("ed,dc->ec", jnp.conjugate(v), b)
+    for keep in ([0, 1], [1, 2], [2, 0], [1]):
+        t = ql.ensemble_trace_product(v, w, keep, 3)
+        a = jnp.einsum("ed,ec->dc", v, jnp.conjugate(v))
+        expected = ql.partial_trace(a @ b, keep=keep, n_qubits=3)
+        np.testing.assert_allclose(np.asarray(t), np.asarray(expected),
+                                   atol=1e-4)
 
 
 @settings(deadline=None, max_examples=15)

@@ -59,6 +59,7 @@ def test_lemma1_product_vs_average_eps2(x64):
     assert diffs[1] < diffs[0] / 30.0
 
 
+@pytest.mark.slow
 def test_params_stay_unitary_through_training():
     key = jax.random.PRNGKey(6)
     _, ds, test = small_setup(key)
@@ -71,6 +72,7 @@ def test_params_stay_unitary_through_training():
             assert bool(ql.is_unitary(u, atol=1e-3))
 
 
+@pytest.mark.slow
 def test_training_improves_fidelity():
     key = jax.random.PRNGKey(8)
     _, ds, test = small_setup(key, num_nodes=8, n_per_node=4)
@@ -82,6 +84,7 @@ def test_training_improves_fidelity():
     assert hist["train_mse"][-1] < hist["train_mse"][0]
 
 
+@pytest.mark.slow
 def test_sgd_mode_runs_and_improves():
     key = jax.random.PRNGKey(10)
     _, ds, test = small_setup(key, num_nodes=8, n_per_node=4)
@@ -121,6 +124,7 @@ def test_non_iid_partition_sorted():
                                atol=1e-5)
 
 
+@pytest.mark.slow
 def test_channel_noise_unitary_and_robust():
     """Beyond-paper: noisy uploads stay unitary; moderate noise does not
     prevent improvement; extreme noise does."""

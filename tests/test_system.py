@@ -1,11 +1,17 @@
 """End-to-end system tests: the full train → checkpoint → restore →
-serve loop on a reduced architecture, and the federated driver."""
+serve loop on a reduced architecture, and the federated driver.
+
+Marked ``slow`` as a module: the shared fixture trains for 40 steps and
+the drivers run real training loops. Tier-1 skips these by default
+(pytest.ini); run them with ``pytest -m slow``."""
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro import checkpoint as ckpt
 from repro.configs import get_config
