@@ -7,10 +7,11 @@ import time
 
 import jax
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed
 
-WIDTHS = (2, 3, 2)
+WIDTHS = qnn_232.WIDTHS
 ITERS = 40
 SIGMAS = (0.0, 1.0, 3.0, 10.0, 30.0)
 
@@ -19,9 +20,7 @@ def run(sigma: float, seed: int = 42):
     key = jax.random.PRNGKey(seed)
     _, ds, test = qdata.make_federated_dataset(
         key, 2, num_nodes=100, n_per_node=4, n_test=32)
-    cfg = fed.QuantumFedConfig(
-        widths=WIDTHS, num_nodes=100, nodes_per_round=10,
-        interval_length=2, eps=0.1, upload_noise=sigma)
+    cfg = qnn_232.config(interval_length=2, upload_noise=sigma)
     t0 = time.time()
     _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
                         n_iterations=ITERS, eval_every=ITERS)

@@ -1,7 +1,10 @@
 """Old (dense full-space) vs new (local-contraction) quantum engine:
 per-round ``server_round`` wall time across growing widths, the headline
-number of the engine rebuild. Emits ``BENCH_engine.json`` so later PRs
-can track the trajectory.
+number of the engine rebuild — plus the strategy-driven round: wall time
+per aggregation mode (product / average / served) and the shard_map
+pod-sharded fan-out (timed in a subprocess with faked host devices, the
+dryrun trick). Emits ``BENCH_engine.json`` so later PRs can track the
+trajectory.
 
     PYTHONPATH=src python -m benchmarks.bench_engine [--out BENCH_engine.json]
 """
@@ -9,10 +12,14 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed
 from repro.core.quantum import qnn
@@ -20,6 +27,42 @@ from repro.core.quantum import qnn
 # widths, timing reps (the dense path at (4,5,4) runs 512-dim dense
 # sandwiches — one rep is plenty to resolve a multi-second round)
 WIDTH_SETS = (((2, 3, 2), 5), ((3, 4, 3), 3), ((4, 5, 4), 1))
+
+AGG_MODES = ("product", "average", "served")
+
+# Child process for the shard_map fan-out: fakes 4 host devices (must be
+# set before jax import, hence a subprocess), builds a ('pod',) mesh and
+# times the pod-sharded round vs the vmap fallback on the same problem.
+_SHARD_MAP_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+import json, time
+import jax
+from repro.configs import qnn_232
+from repro.core.quantum import data as qdata, federated as fed, qnn
+
+N, NP, REPS = 8, 4, 5
+_, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(0), 2,
+                                        num_nodes=N, n_per_node=4, n_test=4)
+params = qnn.init_params(jax.random.PRNGKey(1), qnn_232.WIDTHS)
+key = jax.random.PRNGKey(2)
+out = {"n_devices": jax.device_count()}
+for fanout, ctx in (("vmap", None), ("shard_map", jax.make_mesh((4,), ("pod",)))):
+    cfg = qnn_232.config(num_nodes=N, nodes_per_round=NP,
+                         interval_length=2, fanout=fanout)
+    def one():
+        if ctx is None:
+            return fed.server_round(params, ds, key, cfg)
+        with ctx:
+            return fed.server_round(params, ds, key, cfg)
+    jax.block_until_ready(one())
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        jax.block_until_ready(one())
+    out[fanout + "_ms"] = (time.perf_counter() - t0) / REPS * 1e3
+print(json.dumps(out))
+"""
 
 
 def time_round(cfg, params, ds, key, reps):
@@ -30,8 +73,7 @@ def time_round(cfg, params, ds, key, reps):
     return (time.perf_counter() - t0) / reps
 
 
-def main(rows=None, out_path: str = "BENCH_engine.json"):
-    rows = rows if rows is not None else []
+def bench_engines(rows):
     print("# server_round wall time: dense full-space (seed) vs local "
           "contractions")
     results = []
@@ -40,9 +82,8 @@ def main(rows=None, out_path: str = "BENCH_engine.json"):
         _, ds, _ = qdata.make_federated_dataset(key, widths[0], num_nodes=4,
                                                 n_per_node=4, n_test=4)
         params = qnn.init_params(jax.random.PRNGKey(1), widths)
-        cfg = fed.QuantumFedConfig(widths=widths, num_nodes=4,
-                                   nodes_per_round=2, interval_length=2,
-                                   eps=0.05)
+        cfg = qnn_232.config(widths=widths, num_nodes=4, nodes_per_round=2,
+                             interval_length=2, eps=0.05)
         times = {}
         for engine in ("local", "dense"):
             times[engine] = time_round(cfg._replace(engine=engine), params,
@@ -59,12 +100,73 @@ def main(rows=None, out_path: str = "BENCH_engine.json"):
                      f"speedup={speedup:.1f}x"))
         rows.append((f"engine_round/{name}/dense", times["dense"] * 1e6,
                      "seed full-space path"))
+    return results
+
+
+AGG_BENCH_CONFIG = {"num_nodes": 8, "nodes_per_round": 4,
+                    "interval_length": 2, "n_per_node": 4}
+
+
+def bench_aggregation_modes(rows, reps=5):
+    """server_round per strategy-registry aggregation mode at (2,3,2)."""
+    print("# server_round wall time per aggregation strategy (2,3,2)")
+    key = jax.random.PRNGKey(0)
+    _, ds, _ = qdata.make_federated_dataset(
+        key, 2, num_nodes=AGG_BENCH_CONFIG["num_nodes"],
+        n_per_node=AGG_BENCH_CONFIG["n_per_node"], n_test=4)
+    params = qnn.init_params(jax.random.PRNGKey(1), qnn_232.WIDTHS)
+    results = []
+    for agg in AGG_MODES:
+        cfg = qnn_232.config(
+            num_nodes=AGG_BENCH_CONFIG["num_nodes"],
+            nodes_per_round=AGG_BENCH_CONFIG["nodes_per_round"],
+            interval_length=AGG_BENCH_CONFIG["interval_length"],
+            aggregation=agg)
+        ms = time_round(cfg, params, ds, jax.random.PRNGKey(2), reps) * 1e3
+        print(f"  aggregation={agg:8s} {ms:9.2f} ms")
+        results.append({"aggregation": agg, "ms": ms})
+        rows.append((f"server_round/agg_{agg}", ms * 1e3, "strategy registry"))
+    return {"config": AGG_BENCH_CONFIG, "results": results}
+
+
+def bench_shard_map(rows):
+    """Pod-sharded fan-out vs vmap, on 4 faked host devices."""
+    print("# server_round fan-out: shard_map (4 fake pods) vs vmap")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = ("src" + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else "src")
+    proc = subprocess.run([sys.executable, "-c", _SHARD_MAP_CHILD],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    if proc.returncode != 0:
+        print(f"  (skipped: child failed)\n{proc.stderr[-2000:]}")
+        return {"error": "child failed"}
+    result = {"config": {"num_nodes": 8, "nodes_per_round": 4,
+                         "interval_length": 2, "n_per_node": 4}}
+    result.update(json.loads(proc.stdout.strip().splitlines()[-1]))
+    print(f"  n_devices={result['n_devices']}  "
+          f"vmap {result['vmap_ms']:9.2f} ms  "
+          f"shard_map {result['shard_map_ms']:9.2f} ms")
+    rows.append(("server_round/fanout_shard_map", result["shard_map_ms"] * 1e3,
+                 f"{result['n_devices']} fake pods"))
+    rows.append(("server_round/fanout_vmap", result["vmap_ms"] * 1e3,
+                 "single-device fallback"))
+    return result
+
+
+def main(rows=None, out_path: str = "BENCH_engine.json"):
+    rows = rows if rows is not None else []
+    engine_results = bench_engines(rows)
+    agg_results = bench_aggregation_modes(rows)
+    shard_results = bench_shard_map(rows)
     if out_path:
         payload = {"bench": "quantum_engine_server_round",
                    "backend": jax.default_backend(),
                    "config": {"num_nodes": 4, "nodes_per_round": 2,
                               "interval_length": 2, "n_per_node": 4},
-                   "results": results}
+                   "results": engine_results,
+                   "aggregation_modes": agg_results,   # per-section config
+                   "shard_map_fanout": shard_results}  # inside each entry
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"  wrote {out_path}")

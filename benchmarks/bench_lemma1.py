@@ -9,10 +9,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed, qnn
 
-WIDTHS = (2, 3, 2)
+WIDTHS = qnn_232.WIDTHS
 
 
 def main(rows=None):
@@ -27,9 +28,9 @@ def main(rows=None):
         outs = {}
         t0 = time.time()
         for agg in ("product", "average"):
-            cfg = fed.QuantumFedConfig(
-                widths=WIDTHS, num_nodes=8, nodes_per_round=8,
-                interval_length=2, eps=eps, aggregation=agg)
+            cfg = qnn_232.config(num_nodes=8, nodes_per_round=8,
+                                 interval_length=2, eps=eps,
+                                 aggregation=agg)
             outs[agg] = fed.server_round(params, ds, jax.random.PRNGKey(5),
                                          cfg)
         secs = time.time() - t0

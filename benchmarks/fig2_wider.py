@@ -12,6 +12,7 @@ import time
 
 import jax
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed
 
@@ -23,9 +24,8 @@ def run(widths, n_nodes=20, n_per_round=5, n_per_node=6, seed=42):
     _, ds, test = qdata.make_federated_dataset(
         key, widths[0], num_nodes=n_nodes, n_per_node=n_per_node,
         n_test=24)
-    cfg = fed.QuantumFedConfig(
-        widths=widths, num_nodes=n_nodes, nodes_per_round=n_per_round,
-        interval_length=2, eps=0.1)
+    cfg = qnn_232.config(widths=widths, num_nodes=n_nodes,
+                         nodes_per_round=n_per_round, interval_length=2)
     t0 = time.time()
     _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
                         n_iterations=ITERS, eval_every=ITERS // 4)

@@ -9,10 +9,11 @@ import time
 
 import jax
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed
 
-WIDTHS = (2, 3, 2)
+WIDTHS = qnn_232.WIDTHS
 N_NODES, N_PER_ROUND, N_PER_NODE = 100, 10, 4
 ITERS = 50
 RATIOS = (0.1, 0.3, 0.5, 0.7, 0.9)
@@ -23,9 +24,7 @@ def run(noise: float, iters: int = ITERS, seed: int = 42):
     _, ds, test = qdata.make_federated_dataset(
         key, 2, num_nodes=N_NODES, n_per_node=N_PER_NODE,
         noise_ratio=noise, n_test=32)
-    cfg = fed.QuantumFedConfig(
-        widths=WIDTHS, num_nodes=N_NODES, nodes_per_round=N_PER_ROUND,
-        interval_length=2, eps=0.1)
+    cfg = qnn_232.config(interval_length=2)
     t0 = time.time()
     _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
                         n_iterations=iters, eval_every=iters)

@@ -29,8 +29,28 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated suite names (default: all)")
+    ap.add_argument("--aggregation", default=None,
+                    help="override the aggregation strategy for the "
+                         "qnn_232-driven suites (registry-validated)")
+    ap.add_argument("--participation", default=None,
+                    help="override the participation schedule for the "
+                         "qnn_232-driven suites (registry-validated)")
+    ap.add_argument("--dropout-rate", type=float, default=None,
+                    help="straggler rate for --participation dropout")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(SUITES)
+
+    # strategy-driven config: overrides flow through the validated
+    # qnn_232.config helper, never as raw strings into the suites
+    from repro.configs import qnn_232
+    overrides = {k: v for k, v in (("aggregation", args.aggregation),
+                                   ("participation", args.participation),
+                                   ("dropout_rate", args.dropout_rate))
+                 if v is not None}
+    if args.participation == "dropout" and args.dropout_rate is None:
+        ap.error("--participation dropout needs --dropout-rate > 0")
+    if overrides:
+        qnn_232.set_strategy_overrides(**overrides)
 
     rows = []
     t0 = time.time()

@@ -1,15 +1,16 @@
 """Paper Fig. 3 at example scale: QuantumFed robustness to polluted
 training data. Trains with 30% and 70% random pairs and evaluates on
-clean test data.
+clean test data. The run config comes from the strategy-driven
+``repro.configs.qnn_232.config`` helper (registry-validated) rather than
+raw aggregation strings.
 
     PYTHONPATH=src python examples/noise_robustness.py
 """
 import jax
 
+from repro.configs import qnn_232
 from repro.core.quantum import data as qdata
 from repro.core.quantum import federated as fed
-
-WIDTHS = (2, 3, 2)
 
 
 def run(noise):
@@ -17,9 +18,8 @@ def run(noise):
     _, dataset, test = qdata.make_federated_dataset(
         key, n_qubits=2, num_nodes=50, n_per_node=4,
         noise_ratio=noise, n_test=32)
-    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=50,
-                               nodes_per_round=10, interval_length=2,
-                               eps=0.1)
+    cfg = qnn_232.config(num_nodes=50, nodes_per_round=10,
+                         interval_length=2)
     _, hist = fed.train(jax.random.PRNGKey(7), cfg, dataset, test,
                         n_iterations=40, eval_every=40)
     return hist

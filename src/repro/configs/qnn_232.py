@@ -1,5 +1,13 @@
 """The paper's own model: the 2-3-2 dissipative QNN trained by
-QuantumFed (§IV-A), plus the experiment hyperparameters of Fig. 2/3."""
+QuantumFed (§IV-A), plus the experiment hyperparameters of Fig. 2/3.
+
+``CONFIG`` is the frozen Fig. 2/3 default. Examples and benchmarks build
+variants through ``config(**overrides)``, which validates the
+aggregation / participation names against the shared federation-core
+registries (``repro.core.fed.strategies`` / ``.participation``) instead
+of plumbing raw strings — unknown strategies fail before any tracing.
+"""
+from repro.core.fed import participation, strategies
 from repro.core.quantum.federated import QuantumFedConfig
 
 WIDTHS = (2, 3, 2)
@@ -18,3 +26,23 @@ CONFIG = QuantumFedConfig(
 N_PER_NODE = 4
 N_TEST = 32
 N_ITERATIONS = 50
+
+# process-wide strategy defaults (benchmarks/run.py --aggregation /
+# --participation); explicit per-call overrides win
+_OVERRIDES: dict = {}
+
+
+def config(**overrides) -> QuantumFedConfig:
+    """Fig. 2/3 defaults with registry-validated overrides."""
+    cfg = CONFIG._replace(**{**_OVERRIDES, **overrides})
+    strategies.get_aggregation(cfg.aggregation)
+    participation.validate(cfg.participation)
+    return cfg
+
+
+def set_strategy_overrides(**kv) -> None:
+    """Install process-wide strategy defaults (validated)."""
+    probe = CONFIG._replace(**kv)
+    strategies.get_aggregation(probe.aggregation)
+    participation.validate(probe.participation)
+    _OVERRIDES.update(kv)

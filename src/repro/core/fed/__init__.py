@@ -1,7 +1,21 @@
-"""Classical federated substrate: QuantumFed's interval-length local
-update + data-weighted aggregation (Lemma-1 additive form) for arbitrary
-JAX pytree models, with the multi-pod 'pod' mesh axis as the federation
-axis."""
+"""Federation core shared by the quantum and classical stacks.
+
+One place for the pieces every QuanFedPS round is made of:
+
+* ``strategies`` — aggregation registry (Eq. 6 ``product``, Eq. 8
+  ``average``, compressed-wire ``served``) + wire-dtype casting.
+* ``participation`` — node-selection schedules (``uniform`` /
+  ``weighted`` / ``dropout``) and Alg. 2 data-volume weights.
+* ``channel`` — ChannelModel protocol for what happens to uploads in
+  flight (identity, Hermitian noise; future quantization).
+* ``fed_step`` / ``local`` — the classical substrate: interval-length
+  local update + weighted delta aggregation for arbitrary JAX pytree
+  models, with the multi-pod 'pod' mesh axis as the federation axis.
+
+The quantum stack (``repro.core.quantum.federated``) consumes the same
+three registries for its unitary-update rounds.
+"""
+from repro.core.fed import channel, participation, strategies  # noqa: F401
 from repro.core.fed.config import FederatedConfig  # noqa: F401
 from repro.core.fed.fed_step import (  # noqa: F401
     fed_params_axes, fed_train_round, replicate_for_pods)

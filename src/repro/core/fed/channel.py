@@ -1,0 +1,88 @@
+"""Channel models for federated uploads (the ``ChannelModel`` protocol).
+
+What happens to a node's update between node and server lives here —
+moved from ``repro.core.quantum.channel_noise`` (which remains as a
+back-compat shim) so that Hermitian upload noise, future quantization,
+erasure, etc. share one registry instead of being quantum-path
+special cases.
+
+A channel is a callable ``(key, uploads) -> uploads`` over a list (or
+pytree) of stacked update arrays. The Hermitian model perturbs each
+uploaded update matrix K with GUE noise scaled relative to ||K||_F:
+
+    K_noisy = K + sigma * ||K||_F * H,   H ~ GUE, ||H||_F = 1
+
+The perturbed update unitary e^{i eps K_noisy} remains exactly unitary
+(the upload stays physical), so this probes robustness of the
+AGGREGATION — complementary to the paper's Fig. 3, which only pollutes
+the training DATA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Protocol
+
+import jax
+import jax.numpy as jnp
+
+
+def _dagger(a: jax.Array) -> jax.Array:
+    return jnp.conjugate(jnp.swapaxes(a, -1, -2))
+
+
+class ChannelModel(Protocol):
+    """Transforms uploads on their way to the server."""
+
+    def __call__(self, key: jax.Array, uploads):
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityChannel:
+    """Noiseless classical transmission (the paper's assumption)."""
+
+    def __call__(self, key: jax.Array, uploads):
+        del key
+        return uploads
+
+
+@dataclasses.dataclass(frozen=True)
+class HermitianNoiseChannel:
+    """Relative Hermitian (GUE) noise on each uploaded update matrix."""
+    sigma: float
+
+    def __call__(self, key: jax.Array, uploads):
+        return perturb_updates(key, uploads, self.sigma)
+
+
+def make_channel(name: str, sigma: float = 0.0) -> ChannelModel:
+    """Channel registry: "identity" | "hermitian"."""
+    if name == "identity":
+        return IdentityChannel()
+    if name == "hermitian":
+        return HermitianNoiseChannel(sigma)
+    raise ValueError(f"unknown channel {name!r}; registered: "
+                     f"['identity', 'hermitian']")
+
+
+def hermitian_noise(key: jax.Array, shape, dtype) -> jax.Array:
+    """GUE-normalized Hermitian noise with unit Frobenius scale."""
+    kr, ki = jax.random.split(key)
+    a = (jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape)
+         ).astype(dtype)
+    h = (a + _dagger(a)) / 2.0
+    norm = jnp.sqrt(jnp.sum(jnp.abs(h) ** 2, axis=(-2, -1), keepdims=True))
+    return h / jnp.maximum(norm, 1e-12)
+
+
+def perturb_updates(key: jax.Array, ks: List[jax.Array], sigma: float
+                    ) -> List[jax.Array]:
+    """Add relative Hermitian noise to each (stacked) update matrix."""
+    out = []
+    for i, k in enumerate(ks):
+        kk = jax.random.fold_in(key, i)
+        h = hermitian_noise(kk, k.shape, k.dtype)
+        scale = jnp.sqrt(jnp.sum(jnp.abs(k) ** 2, axis=(-2, -1),
+                                 keepdims=True))
+        out.append(k + sigma * scale * h)
+    return out

@@ -15,14 +15,22 @@ class FederatedConfig:
     interval_length: I_l of Alg. 1 — local optimizer steps between
     cross-node aggregations. I_l=1 reproduces synchronous data-parallel
     training exactly (the paper's §III-C observation).
+    participation / dropout_rate: node-selection schedule (see
+    repro.core.fed.participation — the registry shared with the quantum
+    stack): "uniform" (Alg. 2 step 3), "weighted" (by data volume), or
+    "dropout" (straggler masking at the given rate).
     """
     num_nodes: int = 2
     nodes_per_round: int = 2
     interval_length: int = 1
-    # 'average' = Lemma-1 additive delta aggregation (FedAvg / the
-    # paper's Eq. 8). Data-volume weights are taken from node token
-    # counts.
+    # Aggregation strategy name resolved through
+    # repro.core.fed.strategies: 'average' = Lemma-1 additive delta
+    # aggregation (FedAvg / the paper's Eq. 8) with data-volume weights
+    # from node token counts; 'served' = the same over a compressed
+    # (bf16) wire. 'product' is quantum-only and rejected here.
     aggregation: str = "average"
+    participation: str = "uniform"
+    dropout_rate: float = 0.0
     # outer step scaling (1.0 = plain FedAvg; <1 damps, >1 Nesterov-ish)
     outer_lr: float = 1.0
     # dtype of the uploaded deltas. bf16 halves the cross-node traffic

@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.fed import participation, strategies
 from repro.core.fed.config import FederatedConfig
 from repro.core.fed.local import node_delta
 
@@ -40,7 +41,8 @@ def fed_params_axes(axes_tree, abstract_tree=None, num_nodes: int = 0):
 
 def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
                     node_batches, lr, fed_cfg: FederatedConfig,
-                    token_counts: Optional[jax.Array] = None
+                    token_counts: Optional[jax.Array] = None,
+                    participation_mask: Optional[jax.Array] = None
                     ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
     """One synchronization iteration.
 
@@ -49,11 +51,20 @@ def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
     node_batches: pytree with leading (num_nodes, I_l, ...) axes.
     token_counts: (num_nodes,) data-volume weights N_n (Alg. 2); equal
     weighting when None.
+    participation_mask: (num_nodes,) 1.0/0.0 mask from the participation
+    schedule (see repro.core.fed.participation) — a dropped node's delta
+    is zero-weighted and the remaining weights renormalize.
     Returns (new_params, new opt states, metrics).
     """
     n = fed_cfg.num_nodes
 
-    delta_dt = jnp.dtype(fed_cfg.delta_dtype)
+    agg = strategies.get_aggregation(fed_cfg.aggregation)
+    if agg.combine != "average":
+        raise ValueError(
+            f"classical substrate aggregates additive deltas; strategy "
+            f"{fed_cfg.aggregation!r} (combine={agg.combine!r}) is "
+            "quantum-only")
+    delta_dt = jnp.dtype(agg.wire_dtype or fed_cfg.delta_dtype)
 
     def one_node(opt_state, batches):
         d, s, m = node_delta(loss_fn, opt, params, opt_state, batches, lr)
@@ -63,13 +74,13 @@ def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
     deltas, new_opt_states, metrics = jax.vmap(
         one_node, in_axes=(0, 0))(opt_states_nodes, node_batches)
 
-    if token_counts is None:
-        w = jnp.full((n,), 1.0 / n, jnp.float32)
-    else:
-        tc = token_counts.astype(jnp.float32)
-        w = tc / jnp.maximum(jnp.sum(tc), 1.0)
+    sizes = (jnp.ones((n,), jnp.float32) if token_counts is None
+             else token_counts.astype(jnp.float32))
+    mask = (jnp.ones((n,), jnp.float32) if participation_mask is None
+            else participation_mask.astype(jnp.float32))
+    w = participation.round_weights(fed_cfg.participation, sizes, mask)
 
-    def agg(p, d):
+    def agg_leaf(p, d):
         # weight per node BEFORE the sum so the cross-pod all-reduce
         # happens in delta_dtype (a tensordot against fp32 weights would
         # silently promote the wire traffic back to fp32)
@@ -79,13 +90,6 @@ def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
                 + fed_cfg.outer_lr * mean_d.astype(jnp.float32)).astype(
                     p.dtype)
 
-    new_params = jax.tree.map(agg, params, deltas)
+    new_params = jax.tree.map(agg_leaf, params, deltas)
     metrics = jax.tree.map(jnp.mean, metrics)
     return new_params, new_opt_states, metrics
-
-
-def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int
-                 ) -> jax.Array:
-    """Alg. 2 node selection (single-host federated simulation)."""
-    return jax.random.choice(key, num_nodes, (nodes_per_round,),
-                             replace=False)

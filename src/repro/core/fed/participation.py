@@ -1,0 +1,101 @@
+"""Participation schedules for Alg. 2 node selection (shared registry).
+
+Both federated stacks (quantum ``core/quantum/federated.py`` and
+classical ``core/fed/fed_step.py`` via ``launch/fed_train.py``) sample
+their per-round node subsets here — the single home of the
+``jax.random.choice(..., replace=False)`` idiom that used to be inlined
+in both.
+
+Schedules:
+
+* ``"uniform"`` — N_p of N uniformly without replacement (the paper's
+  Alg. 2 step 3; bit-compatible with the pre-registry code: same key,
+  same single ``choice`` call).
+* ``"weighted"`` — without replacement, inclusion probability
+  proportional to the node's data volume N_n (size-aware participation;
+  the varied client/participation regimes of FedQNN, arXiv:2403.10861).
+* ``"dropout"`` — uniform selection, then each selected node
+  independently drops out with probability ``dropout_rate``
+  (straggler/failure masking). A dropped node's update is zeroed by the
+  returned mask and its data-volume weight is renormalized over the
+  survivors by ``participation_weights``.
+
+``sample_nodes`` returns ``(sel, mask)``: ``sel`` the (N_p,) selected
+node indices and ``mask`` a (N_p,) float32 participation mask (1.0 =
+update counted, 0.0 = dropped). All schedules are jit-traceable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+SCHEDULES = ("uniform", "weighted", "dropout")
+
+
+def validate(schedule: str) -> str:
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown participation schedule {schedule!r}; "
+                         f"registered: {list(SCHEDULES)}")
+    return schedule
+
+
+def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
+                 schedule: str = "uniform",
+                 node_sizes: Optional[jax.Array] = None,
+                 dropout_rate: float = 0.0
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Alg. 2 node selection under a participation schedule.
+
+    node_sizes: (num_nodes,) per-node data volumes N_n; required by the
+    "weighted" schedule, ignored otherwise.
+    Returns (sel, mask) as documented in the module docstring.
+    """
+    validate(schedule)
+    ones = jnp.ones((nodes_per_round,), jnp.float32)
+    if schedule == "uniform":
+        sel = jax.random.choice(key, num_nodes, (nodes_per_round,),
+                                replace=False)
+        return sel, ones
+    if schedule == "weighted":
+        if node_sizes is None:
+            raise ValueError("'weighted' participation needs node_sizes")
+        p = node_sizes.astype(jnp.float32)
+        p = p / jnp.sum(p)
+        sel = jax.random.choice(key, num_nodes, (nodes_per_round,),
+                                replace=False, p=p)
+        return sel, ones
+    # dropout: uniform selection, then independent straggler masking
+    k_sel, k_drop = jax.random.split(key)
+    sel = jax.random.choice(k_sel, num_nodes, (nodes_per_round,),
+                            replace=False)
+    mask = (jax.random.uniform(k_drop, (nodes_per_round,))
+            >= dropout_rate).astype(jnp.float32)
+    return sel, mask
+
+
+def participation_weights(node_sizes: jax.Array, mask: jax.Array
+                          ) -> jax.Array:
+    """Alg. 2 data-volume weights w_n = N_n / N_t, renormalized over the
+    nodes that actually participated (mask 1.0). All-dropped rounds give
+    all-zero weights — the aggregate becomes the identity update."""
+    w = mask * node_sizes.astype(jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1e-12)
+
+
+def round_weights(schedule: str, node_sizes: jax.Array, mask: jax.Array
+                  ) -> jax.Array:
+    """Aggregation weights PAIRED with the sampling schedule so the
+    round stays an unbiased estimate of Alg. 2's data-weighted
+    objective: size-proportional ("weighted") sampling pairs with
+    uniform weights over the survivors — weighting the selected nodes by
+    N_n again would bias contributions ~N_n^2 — while uniform/dropout
+    sampling pairs with the data-volume weights.
+
+    node_sizes: the (nodes_per_round,) sizes of the SELECTED nodes.
+    """
+    validate(schedule)
+    if schedule == "weighted":
+        return participation_weights(jnp.ones_like(node_sizes), mask)
+    return participation_weights(node_sizes, mask)

@@ -1,0 +1,94 @@
+"""Aggregation strategy registry shared by the quantum and classical
+federated stacks.
+
+A strategy names WHAT the server does with the uploaded node updates:
+
+* ``"product"`` — the paper's Eq. 6: multiply every node's scaled update
+  unitary onto the global model (quantum stack only; there is no
+  multiplicative form for additive parameter deltas).
+* ``"average"`` — the paper's Eq. 8 (Lemma-1 small-eps limit): the
+  data-volume-weighted mean of the uploads, applied once. This is the
+  form both stacks share — FedAvg on the classical substrate.
+* ``"served"`` — ``average`` with a compressed upload: node updates are
+  cast to a narrow wire dtype before aggregation (the ``delta_dtype``
+  trick of the classical stack, generalized). Real deltas go through the
+  strategy's ``wire_dtype`` directly; complex uploads (quantum update
+  matrices) transit it per real/imag part and come back in their working
+  dtype — genuinely lossy at ANY working precision, not just under x64.
+  Lemma 1's O(eps^2) error argument dominates the rounding, so training
+  tolerates the narrower wire.
+
+The registry is the single dispatch point: ``core/quantum/federated.py``
+routes its unitary aggregation and ``core/fed/fed_step.py`` its delta
+aggregation through ``get_aggregation`` — unknown names fail loudly in
+both stacks, and new modes (quantized, sparsified, ...) are added here
+once instead of per-stack.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregation:
+    """One server-side aggregation mode.
+
+    combine: "product" (Eq. 6 unitary products) or "average" (Eq. 8 /
+    additive). wire_dtype: optional narrow dtype the uploads are cast to
+    on the wire (None = full precision); complex uploads use the complex
+    dtype of matching width.
+    """
+    name: str
+    combine: str
+    wire_dtype: Optional[str] = None
+
+
+AGGREGATIONS: Dict[str, Aggregation] = {}
+
+
+def register_aggregation(agg: Aggregation) -> Aggregation:
+    AGGREGATIONS[agg.name] = agg
+    return agg
+
+
+register_aggregation(Aggregation("product", combine="product"))
+register_aggregation(Aggregation("average", combine="average"))
+register_aggregation(Aggregation("served", combine="average",
+                                 wire_dtype="bfloat16"))
+
+
+def get_aggregation(name: str) -> Aggregation:
+    """Look up a registered aggregation mode; unknown names fail loudly."""
+    try:
+        return AGGREGATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown aggregation {name!r}; registered: "
+            f"{sorted(AGGREGATIONS)}") from None
+
+
+def wire_cast(tree, agg: Aggregation):
+    """Apply the strategy's wire dtype to a pytree of uploads.
+
+    Real leaves are cast to ``agg.wire_dtype``. Complex leaves round-trip
+    their real and imaginary parts through the wire dtype and come back
+    in the working dtype, so downstream unitary algebra (eigh/expm) stays
+    in working precision while the WIRE carries 2 x wire_dtype per entry.
+    """
+    if agg.wire_dtype is None:
+        return tree
+    wd = jnp.dtype(agg.wire_dtype)
+
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.complexfloating):
+            rd = jnp.real(x).dtype
+            re = jnp.real(x).astype(wd).astype(rd)
+            im = jnp.imag(x).astype(wd).astype(rd)
+            return (re + 1j * im).astype(x.dtype)
+        return x.astype(wd)
+
+    return jax.tree.map(cast, tree)

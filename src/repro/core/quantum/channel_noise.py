@@ -1,45 +1,6 @@
-"""Quantum channel noise on QuantumFed uploads (beyond the paper).
-
-The paper assumes noiseless classical transmission of update unitaries.
-On real quantum hardware the LOCAL TRAINING itself is noisy; we model
-the nearest server-observable effect — perturbed update matrices — as
-Hermitian noise on each uploaded K:
-
-    K_noisy = K + sigma * ||K||_F / sqrt(d) * H,   H ~ GUE (Hermitian)
-
-The perturbed update unitary e^{i eps K_noisy} remains exactly unitary
-(the upload stays physical), so this probes robustness of the
-AGGREGATION — complementary to the paper's Fig. 3, which only pollutes
-the training DATA.
-"""
-from __future__ import annotations
-
-from typing import List
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.quantum import linalg as ql
-
-
-def hermitian_noise(key: jax.Array, shape, dtype) -> jax.Array:
-    """GUE-normalized Hermitian noise with unit Frobenius scale."""
-    kr, ki = jax.random.split(key)
-    a = (jax.random.normal(kr, shape) + 1j * jax.random.normal(ki, shape)
-         ).astype(dtype)
-    h = (a + ql.dagger(a)) / 2.0
-    norm = jnp.sqrt(jnp.sum(jnp.abs(h) ** 2, axis=(-2, -1), keepdims=True))
-    return h / jnp.maximum(norm, 1e-12)
-
-
-def perturb_updates(key: jax.Array, ks: List[jax.Array], sigma: float
-                    ) -> List[jax.Array]:
-    """Add relative Hermitian noise to each (stacked) update matrix."""
-    out = []
-    for i, k in enumerate(ks):
-        kk = jax.random.fold_in(key, i)
-        h = hermitian_noise(kk, k.shape, k.dtype)
-        scale = jnp.sqrt(jnp.sum(jnp.abs(k) ** 2, axis=(-2, -1),
-                                 keepdims=True))
-        out.append(k + sigma * scale * h)
-    return out
+"""Back-compat shim: the Hermitian upload-noise model moved into the
+shared federation core — ``repro.core.fed.channel`` — where it lives
+behind the generic ``ChannelModel`` protocol alongside the identity
+channel (and future quantization models). Import from there."""
+from repro.core.fed.channel import (  # noqa: F401
+    HermitianNoiseChannel, hermitian_noise, perturb_updates)

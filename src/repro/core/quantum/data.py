@@ -6,21 +6,50 @@ data: a fraction of a node's pairs is replaced by independent random
 input/output states (uncorrelated). Heterogeneity: pairs are sorted by a
 scalar key of their vector representation and split contiguously across
 nodes (the paper's sort-based non-iid partition).
+
+Unequal node sizes: partitions accept explicit per-node counts
+``node_sizes``; nodes are padded to the largest count and the TRUE
+counts N_n travel with the dataset (``QuantumDataset.n_per``), so
+Alg. 2's data-volume weights N_n/N_t and the Prop.-1 1/N normalization
+see the real volumes. ``valid_mask`` marks the padded tail invalid.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quantum import linalg as ql
 
 
 class QuantumDataset(NamedTuple):
-    """Per-node quantum data: (num_nodes, n_per_node, dim) state vectors."""
+    """Per-node quantum data: (num_nodes, n_per_node, dim) state vectors.
+
+    n_per: optional (num_nodes,) int32 TRUE pair counts when nodes are
+    unequal — entries beyond a node's count are zero padding. None means
+    every slot is a real pair (the equal-size fast path, mask-free).
+    """
     phi_in: jax.Array
     phi_out: jax.Array
+    n_per: Optional[jax.Array] = None
+
+    def node_counts(self) -> jax.Array:
+        """(num_nodes,) float32 data volumes N_n (Alg. 2 weights)."""
+        if self.n_per is not None:
+            return self.n_per.astype(jnp.float32)
+        return jnp.full((self.phi_in.shape[0],), self.phi_in.shape[1],
+                        jnp.float32)
+
+    def valid_mask(self) -> Optional[jax.Array]:
+        """(num_nodes, n_max) float32 validity mask, or None when every
+        slot is valid (equal sizes)."""
+        if self.n_per is None:
+            return None
+        n_max = self.phi_in.shape[1]
+        return (jnp.arange(n_max)[None, :]
+                < self.n_per[:, None]).astype(jnp.float32)
 
 
 def make_target_unitary(key: jax.Array, n_qubits: int) -> jax.Array:
@@ -35,29 +64,63 @@ def make_pairs(key: jax.Array, u_target: jax.Array, n_pairs: int,
 
 
 def pollute(key: jax.Array, phi_in: jax.Array, phi_out: jax.Array,
-            noise_ratio: float, n_qubits: int
+            noise_ratio: float, n_qubits: int,
+            counts: Optional[jax.Array] = None
             ) -> Tuple[jax.Array, jax.Array]:
-    """Replace the first ceil(ratio*N) pairs of each node with random
-    input/output states (the paper's 'noisy data')."""
+    """Replace the first ceil(ratio*N_n) pairs of each node with random
+    input/output states (the paper's 'noisy data').
+
+    counts: per-node TRUE pair counts N_n (unequal-size datasets); the
+    full slot count is used when None. The noisy count is exactly
+    ceil(ratio*N_n) — computed in float64 with a tiny downward guard so
+    float32 ratios like 0.3 don't round an exact boundary upward.
+    """
     n_nodes, n_per = phi_in.shape[:2]
     k_in, k_out = jax.random.split(key)
     rnd_in = ql.haar_state(k_in, n_qubits, batch=(n_nodes, n_per))
     rnd_out = ql.haar_state(k_out, phi_out.shape[-1].bit_length() - 1,
                             batch=(n_nodes, n_per))
-    n_noisy = int(round(noise_ratio * n_per))
-    mask = (jnp.arange(n_per) < n_noisy)[None, :, None]
+    cnt = (np.full((n_nodes,), n_per, np.float64) if counts is None
+           else np.asarray(counts, np.float64))
+    n_noisy = np.ceil(np.float64(noise_ratio) * cnt - 1e-9).astype(np.int32)
+    n_noisy = np.maximum(n_noisy, 0)
+    mask = (jnp.arange(n_per)[None, :]
+            < jnp.asarray(n_noisy)[:, None])[..., None]
     return (jnp.where(mask, rnd_in, phi_in),
             jnp.where(mask, rnd_out, phi_out))
 
 
+def _pack_nodes(phi_in: jax.Array, phi_out: jax.Array,
+                node_sizes: Sequence[int]) -> QuantumDataset:
+    """Split a pair stream contiguously into nodes of the given sizes,
+    zero-padding each node to the largest size."""
+    sizes = [int(s) for s in node_sizes]
+    assert all(s > 0 for s in sizes), sizes
+    assert sum(sizes) <= phi_in.shape[0], (sum(sizes), phi_in.shape)
+    n_max = max(sizes)
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    ins, outs = [], []
+    for i, s in enumerate(sizes):
+        pad = ((0, n_max - s), (0, 0))
+        ins.append(jnp.pad(phi_in[starts[i]:starts[i] + s], pad))
+        outs.append(jnp.pad(phi_out[starts[i]:starts[i] + s], pad))
+    return QuantumDataset(jnp.stack(ins), jnp.stack(outs),
+                          jnp.asarray(sizes, jnp.int32))
+
+
 def partition_non_iid(phi_in: jax.Array, phi_out: jax.Array,
-                      num_nodes: int) -> QuantumDataset:
+                      num_nodes: int,
+                      node_sizes: Optional[Sequence[int]] = None
+                      ) -> QuantumDataset:
     """Sort pairs by their vector-representation value and split
     contiguously (paper §IV-A: 'gather ... sort them by their vector
-    representation value, and divide them to each node in order')."""
+    representation value, and divide them to each node in order').
+    node_sizes: optional per-node counts for unequal splits."""
     key_val = jnp.angle(phi_in[:, 0]) + 1e-6 * jnp.abs(phi_in[:, 1])
     order = jnp.argsort(key_val)
     phi_in, phi_out = phi_in[order], phi_out[order]
+    if node_sizes is not None:
+        return _pack_nodes(phi_in, phi_out, node_sizes)
     n_per = phi_in.shape[0] // num_nodes
     n_tot = n_per * num_nodes
     return QuantumDataset(
@@ -67,9 +130,13 @@ def partition_non_iid(phi_in: jax.Array, phi_out: jax.Array,
 
 
 def partition_iid(key: jax.Array, phi_in: jax.Array, phi_out: jax.Array,
-                  num_nodes: int) -> QuantumDataset:
+                  num_nodes: int,
+                  node_sizes: Optional[Sequence[int]] = None
+                  ) -> QuantumDataset:
     order = jax.random.permutation(key, phi_in.shape[0])
     phi_in, phi_out = phi_in[order], phi_out[order]
+    if node_sizes is not None:
+        return _pack_nodes(phi_in, phi_out, node_sizes)
     n_per = phi_in.shape[0] // num_nodes
     n_tot = n_per * num_nodes
     return QuantumDataset(
@@ -81,20 +148,31 @@ def partition_iid(key: jax.Array, phi_in: jax.Array, phi_out: jax.Array,
 def make_federated_dataset(key: jax.Array, n_qubits: int, num_nodes: int,
                            n_per_node: int, noise_ratio: float = 0.0,
                            iid: bool = False, n_test: int = 32,
+                           node_sizes: Optional[Sequence[int]] = None,
                            ) -> Tuple[jax.Array, QuantumDataset,
                                       Tuple[jax.Array, jax.Array]]:
-    """Returns (u_target, train dataset per node, clean test pairs)."""
+    """Returns (u_target, train dataset per node, clean test pairs).
+
+    node_sizes: explicit per-node pair counts (overrides num_nodes /
+    n_per_node) — the unequal-size regime; nodes are padded to the
+    largest count with the true counts carried in the dataset.
+    """
     k_u, k_tr, k_te, k_no, k_pm = jax.random.split(key, 5)
     u_target = make_target_unitary(k_u, n_qubits)
-    phi_in, phi_out = make_pairs(k_tr, u_target, num_nodes * n_per_node,
-                                 n_qubits)
-    if iid:
-        ds = partition_iid(k_pm, phi_in, phi_out, num_nodes)
+    if node_sizes is not None:
+        num_nodes = len(node_sizes)
+        n_total = int(sum(int(s) for s in node_sizes))
     else:
-        ds = partition_non_iid(phi_in, phi_out, num_nodes)
+        n_total = num_nodes * n_per_node
+    phi_in, phi_out = make_pairs(k_tr, u_target, n_total, n_qubits)
+    if iid:
+        ds = partition_iid(k_pm, phi_in, phi_out, num_nodes, node_sizes)
+    else:
+        ds = partition_non_iid(phi_in, phi_out, num_nodes, node_sizes)
     if noise_ratio > 0.0:
         noisy_in, noisy_out = pollute(k_no, ds.phi_in, ds.phi_out,
-                                      noise_ratio, n_qubits)
-        ds = QuantumDataset(noisy_in, noisy_out)
+                                      noise_ratio, n_qubits,
+                                      counts=ds.n_per)
+        ds = QuantumDataset(noisy_in, noisy_out, ds.n_per)
     test = make_pairs(k_te, u_target, n_test, n_qubits)
     return u_target, ds, test

@@ -16,7 +16,7 @@ Reachable from training code via ``engine="dense"`` on
 """
 from __future__ import annotations
 
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -91,11 +91,20 @@ def backward(params: Params, sigma_out: jax.Array, widths: Sequence[int]
 
 
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
-                    widths: Sequence[int], eta) -> Params:
-    """Proposition 1 via the dense full-space sandwiches (seed path)."""
-    n_data = phi_in.shape[0]
+                    widths: Sequence[int], eta,
+                    weights: Optional[jax.Array] = None) -> Params:
+    """Proposition 1 via the dense full-space sandwiches (seed path).
+
+    weights: optional (N,) per-example weights — same semantics as the
+    local engine (scale the label density, normalize by sum(w))."""
     rho_in = ql.pure_density(phi_in)
     sigma_l = ql.pure_density(phi_out)
+    if weights is None:
+        denom = phi_in.shape[0]
+    else:
+        w = weights.astype(jnp.float32)
+        sigma_l = sigma_l * w[:, None, None].astype(sigma_l.dtype)
+        denom = jnp.maximum(jnp.sum(w), 1e-12).astype(jnp.float32)
     rhos = feedforward(params, rho_in, widths)
     sigmas = backward(params, sigma_l, widths)
 
@@ -124,7 +133,7 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
             m = a @ bs[j] - bs[j] @ a
             keep = list(range(m_in)) + [m_in + j]
             m_traced = ql.partial_trace(m, keep=keep, n_qubits=n)
-            k = (eta * (2.0 ** m_in) * 1j / n_data) * jnp.sum(m_traced, axis=0)
+            k = (eta * (2.0 ** m_in) * 1j / denom) * jnp.sum(m_traced, axis=0)
             layer_ks.append(k)
         ks.append(jnp.stack(layer_ks))
     return ks

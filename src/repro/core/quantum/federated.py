@@ -1,17 +1,28 @@
 """QuantumFed: QuanFedNode (Alg. 1) + QuanFedPS (Alg. 2).
 
-Two aggregation modes are implemented:
+The round is strategy-driven through the shared federation core
+(``repro.core.fed``): aggregation modes come from the strategy registry
+(``"product"`` Eq. 6, ``"average"`` Eq. 8, ``"served"`` = average over a
+compressed wire), node selection from the participation schedules
+(``"uniform"`` / ``"weighted"`` / ``"dropout"``), and upload noise from
+the ChannelModel registry. Lemma 1 guarantees product and average agree
+to O(eps^2); ``tests/test_quantumfed.py`` checks this, and that
+interval_length=1 + full participation reproduces centralized training
+exactly (§III-C).
 
-* ``"product"`` — the paper's Eq. 6: the server multiplies every node's
-  scaled update unitary ``U_{n,k} = e^{i eps (N_n/N_t) K_{n,k}}`` onto
-  the global model, interval step by interval step.
-* ``"average"`` — the paper's Eq. 8 (the Lemma-1 small-eps limit): the
-  server averages update matrices data-weighted and applies
-  ``e^{i eps K_bar_k}`` per interval step.
+Unequal node sizes: datasets may carry true per-node counts N_n
+(``QuantumDataset.n_per``, padded batches + validity masks). The masks
+flow through the node pass (minibatch selection and the Prop.-1 1/N
+normalization), and Alg. 2's data-volume weights N_n/N_t use the real
+counts.
 
-Lemma 1 guarantees the two agree to O(eps^2); ``tests/test_quantumfed.py``
-checks this, and that interval_length=1 + full participation reproduces
-centralized training exactly (§III-C).
+Fan-out: the per-node QuanFedNode pass runs either as a single-device
+``vmap`` or — when a mesh carrying the 'fed_node' → 'pod' rule axis is
+active — under ``shard_map`` over the 'pod' axis, so each pod trains its
+slice of the sampled nodes locally and the weighted aggregation is the
+round's one cross-pod reduction (mirroring ``core/fed/fed_step.py``).
+``QuantumFedConfig.fanout`` selects: "auto" (shard when >1 pod is
+present), "vmap", or "shard_map".
 
 Engine dispatch: ``QuantumFedConfig.engine`` selects the QNN simulation
 path (``"local"`` tensor contractions, default; ``"dense"`` seed
@@ -29,10 +40,15 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.core.fed import channel as fchannel
+from repro.core.fed import participation, strategies
 from repro.core.quantum import linalg as ql
 from repro.core.quantum import qnn
 from repro.core.quantum.data import QuantumDataset
+from repro.sharding import rules
 
 
 class QuantumFedConfig(NamedTuple):
@@ -43,18 +59,25 @@ class QuantumFedConfig(NamedTuple):
     eta: float = 1.0
     eps: float = 0.1
     minibatch: Optional[int] = None   # None => GD; int => SGD mini-batch
-    aggregation: str = "product"      # "product" (Eq.6) | "average" (Eq.8)
+    aggregation: str = "product"      # strategy registry (fed.strategies)
     # beyond-paper: relative Hermitian noise on uploaded update matrices
     # (hardware/channel imperfection; uploads stay exactly unitary)
     upload_noise: float = 0.0
     engine: str = "local"             # "local" contractions | "dense" seed
     impl: str = "xla"                 # "xla" | "pallas" inner products
+    participation: str = "uniform"    # schedule registry (fed.participation)
+    dropout_rate: float = 0.0         # straggler rate for "dropout"
+    fanout: str = "auto"              # "auto" | "vmap" | "shard_map"
 
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
-                key: jax.Array, eta, eps, cfg: QuantumFedConfig
-                ) -> List[jax.Array]:
+                key: jax.Array, eta, eps, cfg: QuantumFedConfig,
+                mask: Optional[jax.Array] = None) -> List[jax.Array]:
     """QuanFedNode: I_l temporary-update steps on one node's local data.
+
+    mask: optional (n_per,) validity mask for padded unequal-size nodes —
+    minibatch selection draws only valid pairs and the Prop.-1 average
+    normalizes by the true count.
 
     Returns the per-step update matrices K_{n,k}, stacked per layer as
     (I_l, m_l, d, d). (Update *unitaries* are formed server-side from
@@ -66,13 +89,21 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
     def one_step(carry, key_k):
         p = carry
         if cfg.minibatch is not None and cfg.minibatch < n_per:
-            idx = jax.random.choice(key_k, n_per, (cfg.minibatch,),
-                                    replace=False)
+            if mask is None:
+                idx = jax.random.choice(key_k, n_per, (cfg.minibatch,),
+                                        replace=False)
+                b_w = None
+            else:
+                p_sel = mask / jnp.maximum(jnp.sum(mask), 1e-12)
+                idx = jax.random.choice(key_k, n_per, (cfg.minibatch,),
+                                        replace=False, p=p_sel)
+                b_w = mask[idx]
             b_in, b_out = phi_in[idx], phi_out[idx]
         else:
-            b_in, b_out = phi_in, phi_out
+            b_in, b_out, b_w = phi_in, phi_out, mask
         ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
-                                 engine=cfg.engine, impl=cfg.impl)
+                                 engine=cfg.engine, impl=cfg.impl,
+                                 weights=b_w)
         p = qnn.apply_updates(p, ks, eps, impl=cfg.impl)
         return p, ks
 
@@ -120,59 +151,165 @@ def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
     return new_params
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
+def _node_batch(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
+                node_keys: jax.Array, node_mask: Optional[jax.Array],
+                eta, eps, cfg: QuantumFedConfig) -> List[jax.Array]:
+    """vmap the QuanFedNode pass over the leading node axis."""
+    if node_mask is None:
+        f = lambda ni, no, nk: node_update(params, ni, no, nk, eta, eps, cfg)
+        return jax.vmap(f)(node_in, node_out, node_keys)
+    f = lambda ni, no, nk, nm: node_update(params, ni, no, nk, eta, eps,
+                                           cfg, nm)
+    return jax.vmap(f)(node_in, node_out, node_keys, node_mask)
+
+
+def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
+             node_keys: jax.Array, node_mask: Optional[jax.Array],
+             eta, eps, cfg: QuantumFedConfig, mesh) -> List[jax.Array]:
+    """Per-node fan-out: vmap, or shard_map over the 'fed_node' mesh axis
+    (each pod runs its slice of the sampled nodes; the weighted
+    aggregation that follows is the round's one cross-pod reduction)."""
+    if cfg.fanout != "shard_map":
+        return _node_batch(params, node_in, node_out, node_keys, node_mask,
+                           eta, eps, cfg)
+    axis = rules.fed_fanout_axis(mesh) if mesh is not None else None
+    if axis is None:
+        raise ValueError(
+            "fanout='shard_map' needs a mesh carrying the 'fed_node' "
+            "rule axis (e.g. 'pod'); use `with mesh:` or fanout='auto' "
+            "for the vmap fallback")
+    if cfg.nodes_per_round % mesh.shape[axis] != 0:
+        raise ValueError(
+            f"nodes_per_round={cfg.nodes_per_round} must be divisible by "
+            f"mesh axis '{axis}' of size {mesh.shape[axis]}")
+    rep, shard = P(), P(axis)
+    if node_mask is None:
+        body = lambda p, ni, no, nk, et, ep: _node_batch(
+            p, ni, no, nk, None, et, ep, cfg)
+        in_specs = (rep, shard, shard, shard, rep, rep)
+        args = (params, node_in, node_out, node_keys, eta, eps)
+    else:
+        body = lambda p, ni, no, nk, nm, et, ep: _node_batch(
+            p, ni, no, nk, nm, et, ep, cfg)
+        in_specs = (rep, shard, shard, shard, shard, rep, rep)
+        args = (params, node_in, node_out, node_keys, node_mask, eta, eps)
+    fan = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=shard,
+                    check_rep=False)
+    return fan(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
 def _server_round(params: qnn.Params, dataset: QuantumDataset,
-                  key: jax.Array, eta, eps, cfg: QuantumFedConfig
-                  ) -> qnn.Params:
+                  key: jax.Array, eta, eps, cfg: QuantumFedConfig,
+                  mesh=None) -> qnn.Params:
     k_sel, k_node, k_noise = jax.random.split(key, 3)
-    sel = jax.random.choice(k_sel, cfg.num_nodes, (cfg.nodes_per_round,),
-                            replace=False)
-    node_in = dataset.phi_in[sel]    # (N_p, N_n, d_in)
-    node_out = dataset.phi_out[sel]  # (N_p, N_n, d_out)
+    counts = dataset.node_counts()  # (N,) true data volumes N_n
+    sel, pmask = participation.sample_nodes(
+        k_sel, cfg.num_nodes, cfg.nodes_per_round,
+        schedule=cfg.participation, node_sizes=counts,
+        dropout_rate=cfg.dropout_rate)
+    node_in = dataset.phi_in[sel]    # (N_p, n_max, d_in)
+    node_out = dataset.phi_out[sel]  # (N_p, n_max, d_out)
     node_keys = jax.random.split(k_node, cfg.nodes_per_round)
+    vmask = dataset.valid_mask()
+    node_mask = None if vmask is None else vmask[sel]
 
-    ks_all = jax.vmap(node_update, in_axes=(None, 0, 0, 0, None, None, None)
-                      )(params, node_in, node_out, node_keys, eta, eps, cfg)
+    ks_all = _fan_out(params, node_in, node_out, node_keys, node_mask,
+                      eta, eps, cfg, mesh)
 
-    if cfg.upload_noise > 0.0:
-        from repro.core.quantum.channel_noise import perturb_updates
-        ks_all = perturb_updates(k_noise, ks_all, cfg.upload_noise)
+    ch = fchannel.make_channel(
+        "hermitian" if cfg.upload_noise > 0.0 else "identity",
+        sigma=cfg.upload_noise)
+    ks_all = ch(k_noise, ks_all)
 
-    # Data-volume weights N_n / N_t, kept real (equal-sized nodes here,
-    # but general so unequal splits work too); the aggregators cast to
-    # the complex state dtype only where the K's are scaled.
-    n_n = jnp.full((cfg.nodes_per_round,), node_in.shape[1], jnp.float32)
-    weights = n_n / jnp.sum(n_n)
+    # Alg. 2 data-volume weights N_n/N_t from the TRUE per-node counts,
+    # renormalized over the nodes the schedule kept (dropout zeroes a
+    # straggler's weight; size-proportional sampling pairs with uniform
+    # weights to stay unbiased). Kept real; the aggregators cast to the
+    # complex state dtype only where the K's are scaled.
+    weights = participation.round_weights(cfg.participation, counts[sel],
+                                          pmask)
 
-    if cfg.aggregation == "product":
+    agg = strategies.get_aggregation(cfg.aggregation)
+    ks_all = strategies.wire_cast(ks_all, agg)
+    if agg.combine == "product":
         return aggregate_product(params, ks_all, weights, eps, impl=cfg.impl)
-    elif cfg.aggregation == "average":
-        return aggregate_average(params, ks_all, weights, eps, impl=cfg.impl)
-    raise ValueError(f"unknown aggregation {cfg.aggregation!r}")
+    return aggregate_average(params, ks_all, weights, eps, impl=cfg.impl)
+
+
+def _resolve_fanout(cfg: QuantumFedConfig) -> str:
+    """Pick the fan-out OUTSIDE jit. The resolved mode travels in the
+    static cfg and the mesh itself is a static arg of ``_server_round``
+    (Mesh is hashable), so a round traced mesh-less is never replayed
+    for a mesh run, nor one mesh's shard_map trace for another mesh."""
+    if cfg.fanout == "vmap":
+        return "vmap"
+    mesh = rules.current_mesh()
+    axis = rules.fed_fanout_axis(mesh) if mesh is not None else None
+    ok = axis is not None and cfg.nodes_per_round % mesh.shape[axis] == 0
+    if cfg.fanout == "shard_map":
+        if not ok:
+            raise ValueError(
+                "fanout='shard_map' needs an active `with mesh:` whose "
+                "'fed_node' rule axis divides nodes_per_round")
+        return "shard_map"
+    if cfg.fanout != "auto":
+        raise ValueError(f"unknown fanout {cfg.fanout!r}; use "
+                         "'auto' | 'vmap' | 'shard_map'")
+    # auto: shard only when the mesh actually has >1 pod to spread over
+    return "shard_map" if ok and mesh.shape[axis] > 1 else "vmap"
 
 
 def server_round(params: qnn.Params, dataset: QuantumDataset,
                  key: jax.Array, cfg: QuantumFedConfig) -> qnn.Params:
-    """One QuanFedPS iteration: sample N_p nodes, run QuanFedNode on
-    each (vmapped), aggregate update unitaries into the global model.
+    """One QuanFedPS iteration: sample N_p nodes via the participation
+    schedule, run QuanFedNode on each (vmapped or pod-sharded), pass the
+    uploads through the channel model, aggregate per the strategy
+    registry into the global model.
 
     eta/eps are split out of cfg and traced so hyperparameter sweeps
     reuse one compiled round; the structural fields stay static.
     """
-    static_cfg = cfg._replace(eta=0.0, eps=0.0)
-    return _server_round(params, dataset, key, cfg.eta, cfg.eps, static_cfg)
+    static_cfg, mesh = _round_statics(cfg)
+    return _server_round(params, dataset, key, cfg.eta, cfg.eps,
+                         static_cfg, mesh)
+
+
+def _round_statics(cfg: QuantumFedConfig):
+    """The static (cfg, mesh) pair `_server_round` is traced under —
+    eta/eps zeroed out of the cache key, fanout resolved against the
+    ambient mesh. Shared by ``server_round`` and ``lower_server_round``
+    so dryruns lower exactly the trace training executes."""
+    strategies.get_aggregation(cfg.aggregation)   # fail loudly pre-trace
+    participation.validate(cfg.participation)
+    fanout = _resolve_fanout(cfg)
+    mesh = rules.current_mesh() if fanout == "shard_map" else None
+    return cfg._replace(eta=0.0, eps=0.0, fanout=fanout), mesh
+
+
+def lower_server_round(params: qnn.Params, dataset: QuantumDataset,
+                       key: jax.Array, cfg: QuantumFedConfig):
+    """Lower (not run) one round under the ambient mesh — the dryrun /
+    benchmark hook, using the same static-cfg protocol as training."""
+    static_cfg, mesh = _round_statics(cfg)
+    return _server_round.lower(params, dataset, key, cfg.eta, cfg.eps,
+                               static_cfg, mesh)
 
 
 @functools.partial(jax.jit, static_argnames=("widths", "impl"))
 def evaluate(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
-             widths: Tuple[int, ...], impl: str = "xla"
-             ) -> Dict[str, jax.Array]:
+             widths: Tuple[int, ...], impl: str = "xla",
+             weights: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    """Mean fidelity / MSE; `weights` masks out padded invalid pairs."""
     rho_out = qnn.outputs(params, phi_in, widths)
-    return {
-        "fidelity": jnp.mean(qnn.batched_fidelity(phi_out, rho_out,
-                                                  impl=impl)),
-        "mse": jnp.mean(ql.mse_state(phi_out, rho_out)),
-    }
+    fid = qnn.batched_fidelity(phi_out, rho_out, impl=impl)
+    mse = ql.mse_state(phi_out, rho_out)
+    if weights is None:
+        return {"fidelity": jnp.mean(fid), "mse": jnp.mean(mse)}
+    w = weights.astype(fid.dtype)
+    denom = jnp.maximum(jnp.sum(w), 1e-12)
+    return {"fidelity": jnp.sum(w * fid) / denom,
+            "mse": jnp.sum(w * mse) / denom}
 
 
 def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
@@ -186,6 +323,8 @@ def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
 
     train_in = dataset.phi_in.reshape(-1, dataset.phi_in.shape[-1])
     train_out = dataset.phi_out.reshape(-1, dataset.phi_out.shape[-1])
+    vmask = dataset.valid_mask()
+    train_w = None if vmask is None else vmask.reshape(-1)
     test_in, test_out = test
 
     history: Dict[str, list] = {
@@ -194,7 +333,8 @@ def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
     }
 
     def record(t, p):
-        tr = evaluate(p, train_in, train_out, cfg.widths, impl=cfg.impl)
+        tr = evaluate(p, train_in, train_out, cfg.widths, impl=cfg.impl,
+                      weights=train_w)
         te = evaluate(p, test_in, test_out, cfg.widths, impl=cfg.impl)
         history["iteration"].append(t)
         history["train_fidelity"].append(float(tr["fidelity"]))

@@ -27,7 +27,7 @@ products (Prop.-1 commutators, update application, fidelity):
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -179,7 +179,8 @@ def density_from_ensemble(v: jax.Array) -> jax.Array:
 
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
                     widths: Sequence[int], eta, *, engine: str = "local",
-                    impl: str = "xla") -> Params:
+                    impl: str = "xla",
+                    weights: Optional[jax.Array] = None) -> Params:
     """Proposition 1: closed-form Hermitian update matrices K^{l,j}.
 
         K_j^l = eta * 2^{m_{l-1}} * i / N * sum_x tr_rest M_x^{l,j}
@@ -200,17 +201,29 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
 
     phi_in:  (N, 2**m_0) pure input states
     phi_out: (N, 2**m_L) pure label states
+    weights: optional (N,) real per-example weights w_x (e.g. validity
+    masks for padded unequal-size node batches). The Prop.-1 average
+    becomes sum_x w_x tr_rest M_x / sum_x w_x — exact GD over the
+    weighted multiset; zero-weight (padding) examples drop out entirely.
+    Implemented by scaling the label density sigma^L (M is bilinear in
+    the forward A and backward B chains, B linear in sigma), so both
+    engines weight identically.
     Returns a list like params of stacked K's (m_l, d, d).
     """
     if engine == "dense":
         return dense_ref.update_matrices(params, phi_in, phi_out, widths,
-                                         eta)
+                                         eta, weights=weights)
     if engine != "local":
         raise ValueError(f"unknown engine {engine!r}")
 
-    n_data = phi_in.shape[0]
     vs = feedforward_ensemble(params, phi_in, widths)
     sigma = ql.pure_density(phi_out)  # sigma^L, updated as we descend
+    if weights is None:
+        denom = phi_in.shape[0]
+    else:
+        w = weights.astype(jnp.float32)
+        sigma = sigma * w[:, None, None].astype(sigma.dtype)
+        denom = jnp.maximum(jnp.sum(w), 1e-12).astype(jnp.float32)
 
     ks_rev: Params = []
     for l in range(len(widths) - 1, 0, -1):
@@ -237,9 +250,9 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
         layer_ks = []
         for j in range(m_out):
             av = ql.apply_unitary_vec(av, us[j], _acting(m_in, j), n)
-            w = bmm(jnp.conjugate(av), bs[j], impl=impl)  # av† B_j
-            t = ql.ensemble_trace_product(av, w, _acting(m_in, j), n)
-            k = (eta * (2.0 ** m_in) * 1j / n_data) * (t - ql.dagger(t))
+            avb = bmm(jnp.conjugate(av), bs[j], impl=impl)  # av† B_j
+            t = ql.ensemble_trace_product(av, avb, _acting(m_in, j), n)
+            k = (eta * (2.0 ** m_in) * 1j / denom) * (t - ql.dagger(t))
             layer_ks.append(k)
         ks_rev.append(jnp.stack(layer_ks))
 

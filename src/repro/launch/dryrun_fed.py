@@ -15,6 +15,14 @@ in-pod ('data'/'model') bytes per local step stay constant.
 
     PYTHONPATH=src python -m repro.launch.dryrun_fed --arch qwen1.5-4b \
         --intervals 1,4
+
+`--quantum` lowers the QUANTUM server round instead: the QuanFedNode
+fan-out runs under shard_map over the 'pod' axis
+(QuantumFedConfig.fanout="shard_map") and the weighted aggregation is
+the round's one cross-pod reduction — same shape as the classical round.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_fed --quantum \
+        --intervals 1,4
 """
 import argparse
 import json
@@ -126,14 +134,74 @@ def run(arch: str, interval: int, shape_name: str = "train_4k",
     return rec
 
 
+def run_quantum(interval: int, num_nodes: int = 8, nodes_per_round: int = 4,
+                save_hlo: bool = False) -> dict:
+    """Lower one pod-sharded QUANTUM server round on the multi-pod mesh
+    and report collective bytes by axis (one cross-pod reduction)."""
+    from repro.configs import qnn_232
+    from repro.core.quantum import data as qdata
+    from repro.core.quantum import federated as fed
+    from repro.core.quantum import qnn
+
+    mesh = make_production_mesh(multi_pod=True)
+    cfg = qnn_232.config(num_nodes=num_nodes,
+                         nodes_per_round=nodes_per_round,
+                         interval_length=interval, fanout="shard_map")
+    _, ds, _ = qdata.make_federated_dataset(
+        jax.random.PRNGKey(0), qnn_232.WIDTHS[0], num_nodes=num_nodes,
+        n_per_node=4, n_test=4)
+    params = qnn.init_params(jax.random.PRNGKey(1), qnn_232.WIDTHS)
+    key = jax.random.PRNGKey(2)
+
+    with mesh:
+        t0 = time.time()
+        lowered = fed.lower_server_round(params, ds, key, cfg)
+        compiled = lowered.compile()
+        secs = time.time() - t0
+        hlo = compiled.as_text()
+
+    parsed = parse_hlo(hlo, mesh_shape=dict(mesh.shape))
+    by_axis = parsed.get("collective_bytes_by_axis", {})
+    cross_pod = sum(v for k, v in by_axis.items() if "pod" in k)
+    rec = {
+        "arch": f"qnn_{'-'.join(map(str, qnn_232.WIDTHS))}",
+        "mode": "quantum_shard_map",
+        "interval_length": interval,
+        "num_nodes": num_nodes, "nodes_per_round": nodes_per_round,
+        "mesh": "multi", "n_devices": mesh.size,
+        "collective_bytes_total": parsed["collective_bytes_total"],
+        "collective_bytes_by_axis": by_axis,
+        "cross_pod_bytes": cross_pod,
+        "compile_seconds": round(secs, 1),
+    }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    fname = f"quantum__fed_I{interval}.json"
+    with open(os.path.join(OUT_DIR, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    if save_hlo:
+        with open(os.path.join(OUT_DIR, fname[:-5] + ".hlo.txt"),
+                  "w") as f:
+            f.write(hlo)
+    print(f"quantum I_l={interval}: cross-pod "
+          f"{rec['cross_pod_bytes']/1e6:.3f} MB/round, total collectives "
+          f"{rec['collective_bytes_total']/1e6:.3f} MB, "
+          f"compile {rec['compile_seconds']}s")
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-4b")
     ap.add_argument("--intervals", default="1,4")
     ap.add_argument("--delta-dtype", default="float32")
     ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--quantum", action="store_true",
+                    help="lower the pod-sharded quantum round instead")
     args = ap.parse_args()
     for interval in [int(x) for x in args.intervals.split(",")]:
+        if args.quantum:
+            run_quantum(interval, save_hlo=args.save_hlo)
+            continue
         rec = run(args.arch, interval, save_hlo=args.save_hlo,
                   delta_dtype=args.delta_dtype)
         print(f"I_l={interval}: cross-pod {rec['cross_pod_bytes']/1e9:.2f}"

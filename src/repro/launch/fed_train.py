@@ -20,9 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core.fed import FederatedConfig, fed_train_round
-from repro.core.fed.fed_step import sample_nodes
-from repro.data import partition_non_iid, token_batches
+from repro.core.fed import FederatedConfig, fed_train_round, participation
+from repro.data import partition_iid, partition_non_iid, token_batches
 from repro.models import Model
 from repro.optim import AdamW
 
@@ -40,6 +39,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outer-lr", type=float, default=1.0)
     ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--participation", default="uniform",
+                    choices=participation.SCHEDULES,
+                    help="node-selection schedule (shared registry)")
+    ap.add_argument("--dropout", type=float, default=0.0,
+                    help="straggler rate for --participation dropout")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -50,7 +54,9 @@ def main(argv=None):
     fed_cfg = FederatedConfig(num_nodes=args.nodes_per_round,
                               nodes_per_round=args.nodes_per_round,
                               interval_length=args.interval,
-                              outer_lr=args.outer_lr)
+                              outer_lr=args.outer_lr,
+                              participation=args.participation,
+                              dropout_rate=args.dropout)
     loss_fn = lambda p, b: model.loss_fn(p, b)
 
     # pool of node datasets: one big stream partitioned non-iid
@@ -71,9 +77,16 @@ def main(argv=None):
         key, k_sel = jax.random.split(key)
         # fresh global pool each round, partitioned non-iid across N nodes
         pool = next(data)
-        nodes = (partition_non_iid(pool, args.nodes) if not args.iid
-                 else partition_non_iid(pool, args.nodes))
-        sel = sample_nodes(k_sel, args.nodes, args.nodes_per_round)
+        nodes = (partition_iid(pool, args.nodes, seed=args.seed + rnd)
+                 if args.iid else partition_non_iid(pool, args.nodes))
+        # data volumes: tokens per node (equal here, but the schedule API
+        # is volume-aware for unequal pools)
+        node_tokens = jnp.full((args.nodes,), nodes["tokens"][0].size,
+                               jnp.float32)
+        sel, pmask = participation.sample_nodes(
+            k_sel, args.nodes, args.nodes_per_round,
+            schedule=fed_cfg.participation, node_sizes=node_tokens,
+            dropout_rate=fed_cfg.dropout_rate)
         sel_batches = jax.tree.map(lambda x: x[sel], nodes)
         # split each node's data into I_l local-step minibatches
         def to_steps(x):
@@ -83,7 +96,8 @@ def main(argv=None):
         node_batches = jax.tree.map(to_steps, sel_batches)
         params, opt_nodes, metrics = fed_train_round(
             loss_fn, opt, params, opt_nodes, node_batches, args.lr,
-            fed_cfg)
+            fed_cfg, token_counts=node_tokens[sel],
+            participation_mask=pmask)
         le = float(loss_fn(params, eval_batch)[0])
         print(f"round {rnd+1:2d}  eval loss {le:.4f}  "
               f"train loss {float(metrics['loss']):.4f}  "

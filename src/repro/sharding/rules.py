@@ -184,6 +184,24 @@ def constrain(x: jax.Array, *names: Optional[str],
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def current_mesh() -> Optional[Mesh]:
+    """The ambient `with mesh:` context, or None outside one. Public so
+    callers (e.g. the federated quantum round) can pick a fan-out
+    strategy at trace time."""
+    return _current_mesh()
+
+
+def fed_fanout_axis(mesh: Mesh) -> Optional[str]:
+    """The mesh axis backing the 'fed_node' logical axis — the axis the
+    federated node fan-out shards over (shard_map in the quantum round,
+    node-indexed pytrees in the classical one). None when the mesh does
+    not carry it."""
+    for a in _as_axes(active_rules().get("fed_node")):
+        if a in mesh.axis_names:
+            return a
+    return None
+
+
 def _current_mesh() -> Optional[Mesh]:
     try:
         from jax._src import mesh as mesh_lib

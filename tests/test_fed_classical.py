@@ -114,6 +114,82 @@ def test_fed_training_learns_with_adamw():
     assert l1 < l0
 
 
+def test_dropout_participation_mask_drops_node():
+    """Straggler masking via the shared registry semantics: a node with
+    participation mask 0 contributes nothing and the surviving node's
+    weight renormalizes to 1 (classical half of the scenario gate)."""
+    m, params, loss_fn, node_batches = make_setup(interval=1, nodes=2)
+    opt = SGD()
+    fed_cfg = FederatedConfig(num_nodes=2, interval_length=1,
+                              participation="dropout", dropout_rate=0.5)
+    opt_nodes = jax.vmap(lambda _: opt.init(params))(jnp.arange(2))
+    new_p, _, _ = fed_train_round(loss_fn, opt, params, opt_nodes,
+                                  node_batches, 0.1, fed_cfg,
+                                  participation_mask=jnp.array([1.0, 0.0]))
+    g0 = jax.grad(lambda p: loss_fn(p, jax.tree.map(
+        lambda x: x[0, 0], node_batches))[0])(params)
+    ref = jax.tree.map(lambda p, a: p - 0.1 * a, params, g0)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(new_p[k]),
+                                   np.asarray(ref[k]), atol=2e-5)
+
+
+def test_classical_schedules_end_to_end():
+    """Dropout and weighted participation drive full classical rounds
+    through the shared registry (sample_nodes -> mask -> round)."""
+    from repro.core.fed import participation
+
+    m, params, loss_fn, node_batches = make_setup(interval=2, nodes=2)
+    opt = SGD()
+    sizes = jnp.array([10.0, 30.0])
+    p = params
+    for seed, schedule in ((0, "dropout"), (1, "weighted")):
+        fed_cfg = FederatedConfig(num_nodes=2, interval_length=2,
+                                  participation=schedule, dropout_rate=0.5)
+        sel, mask = participation.sample_nodes(
+            jax.random.PRNGKey(seed), 2, 2, schedule=schedule,
+            node_sizes=sizes, dropout_rate=fed_cfg.dropout_rate)
+        batches = jax.tree.map(lambda x: x[sel], node_batches)
+        opt_nodes = jax.vmap(lambda _: opt.init(p))(jnp.arange(2))
+        p, _, metrics = fed_train_round(loss_fn, opt, p, opt_nodes,
+                                        batches, 0.05, fed_cfg,
+                                        token_counts=sizes[sel],
+                                        participation_mask=mask)
+        assert np.isfinite(float(metrics["loss"]))
+    for k in params:
+        assert np.all(np.isfinite(np.asarray(p[k])))
+
+
+def test_classical_rejects_product_aggregation():
+    """The quantum-only Eq. 6 strategy must fail loudly on the additive
+    substrate (registry-driven dispatch, not silent fallback)."""
+    m, params, loss_fn, node_batches = make_setup(interval=1, nodes=2)
+    opt = SGD()
+    fed_cfg = FederatedConfig(num_nodes=2, interval_length=1,
+                              aggregation="product")
+    opt_nodes = jax.vmap(lambda _: opt.init(params))(jnp.arange(2))
+    with pytest.raises(ValueError, match="quantum-only"):
+        fed_train_round(loss_fn, opt, params, opt_nodes, node_batches,
+                        0.1, fed_cfg)
+
+
+def test_classical_served_wire_dtype():
+    """'served' aggregates over the strategy's bf16 wire; the round runs
+    and stays close to the fp32-wire average round."""
+    m, params, loss_fn, node_batches = make_setup(interval=1, nodes=2)
+    opt = SGD()
+    opt_nodes = jax.vmap(lambda _: opt.init(params))(jnp.arange(2))
+    outs = {}
+    for agg in ("average", "served"):
+        fed_cfg = FederatedConfig(num_nodes=2, interval_length=1,
+                                  aggregation=agg)
+        outs[agg], _, _ = fed_train_round(loss_fn, opt, params, opt_nodes,
+                                          node_batches, 0.1, fed_cfg)
+    for k in params:
+        a, s = np.asarray(outs["average"][k]), np.asarray(outs["served"][k])
+        np.testing.assert_allclose(a, s, atol=5e-3)
+
+
 def test_local_steps_scan():
     m, params, loss_fn, node_batches = make_setup(interval=3, nodes=1)
     opt = SGD()

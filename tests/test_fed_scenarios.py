@@ -1,0 +1,347 @@
+"""Federated scenario tests for the strategy-driven round.
+
+* Parity: the refactored quantum round must reproduce the PRE-refactor
+  ``product``/``average`` paths (a frozen copy of the seed round lives
+  here) with the same PRNG keys to <= 1e-10 at widths (2,3,2).
+* Unequal node sizes: true data-volume weights (no longer the constant
+  ``full(N_n)``) with exact §III-C centralized equivalence at I_l=1.
+* Participation schedules (dropout / weighted) end-to-end on the
+  quantum stack; the classical-side scenarios live in
+  ``tests/test_fed_classical.py`` — both through the shared registry.
+* shard_map fan-out: parity with vmap under a 'pod' mesh (single-device
+  in-process; multi-device via the dryrun fake-host-devices trick).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fed import participation
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+from repro.core.quantum import linalg as ql, qnn
+
+WIDTHS = (2, 3, 2)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _max_err(xs, ys):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(xs, ys))
+
+
+# ---------------------------------------------------------------- parity
+# Frozen copy of the pre-refactor server round (seed commit 7d9aae7):
+# inline uniform sampling, constant full(N_n) weights, hard-coded
+# aggregation dispatch, plain vmap fan-out.
+def _ref_node_update(params, phi_in, phi_out, key, eta, eps, cfg):
+    n_per = phi_in.shape[0]
+
+    def one_step(carry, key_k):
+        p = carry
+        if cfg.minibatch is not None and cfg.minibatch < n_per:
+            idx = jax.random.choice(key_k, n_per, (cfg.minibatch,),
+                                    replace=False)
+            b_in, b_out = phi_in[idx], phi_out[idx]
+        else:
+            b_in, b_out = phi_in, phi_out
+        ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
+                                 engine=cfg.engine, impl=cfg.impl)
+        p = qnn.apply_updates(p, ks, eps, impl=cfg.impl)
+        return p, ks
+
+    keys = jax.random.split(key, cfg.interval_length)
+    _, ks_seq = jax.lax.scan(one_step, params, keys)
+    return ks_seq
+
+
+def _ref_chain(us, upd, impl):
+    def body(acc, u):
+        return qnn.bmm(u, acc, impl=impl), None
+
+    acc, _ = jax.lax.scan(body, us, upd)
+    return acc
+
+
+def _ref_server_round(params, dataset, key, cfg):
+    k_sel, k_node, k_noise = jax.random.split(key, 3)
+    sel = jax.random.choice(k_sel, cfg.num_nodes, (cfg.nodes_per_round,),
+                            replace=False)
+    node_in = dataset.phi_in[sel]
+    node_out = dataset.phi_out[sel]
+    node_keys = jax.random.split(k_node, cfg.nodes_per_round)
+    ks_all = jax.vmap(_ref_node_update,
+                      in_axes=(None, 0, 0, 0, None, None, None)
+                      )(params, node_in, node_out, node_keys, cfg.eta,
+                        cfg.eps, cfg)
+    if cfg.upload_noise > 0.0:
+        from repro.core.quantum.channel_noise import perturb_updates
+        ks_all = perturb_updates(k_noise, ks_all, cfg.upload_noise)
+    n_n = jnp.full((cfg.nodes_per_round,), node_in.shape[1], jnp.float32)
+    weights = n_n / jnp.sum(n_n)
+    if cfg.aggregation == "product":
+        new_params = []
+        for us, ks in zip(params, ks_all):
+            w = weights[:, None, None, None, None].astype(ks.dtype)
+            upd = ql.expm_herm(ks * w, cfg.eps)
+            seq = jnp.swapaxes(upd, 0, 1).reshape((-1,) + upd.shape[2:])
+            new_params.append(_ref_chain(us, seq, cfg.impl))
+        return new_params
+    new_params = []
+    for us, ks in zip(params, ks_all):
+        k_bar = jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
+        upd = ql.expm_herm(k_bar, cfg.eps)
+        new_params.append(_ref_chain(us, upd, cfg.impl))
+    return new_params
+
+
+@pytest.mark.parametrize("aggregation", ["product", "average"])
+@pytest.mark.parametrize("minibatch", [None, 2])
+def test_round_parity_with_prerefactor(x64, aggregation, minibatch):
+    """Same PRNG keys => the strategy-driven round reproduces the
+    pre-refactor round (node subsampling included) to <= 1e-10."""
+    key = jax.random.PRNGKey(0)
+    _, ds, _ = qdata.make_federated_dataset(key, 2, num_nodes=6,
+                                            n_per_node=4, n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(1), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=6,
+                               nodes_per_round=3, interval_length=2,
+                               eps=0.05, minibatch=minibatch,
+                               aggregation=aggregation)
+    k_round = jax.random.PRNGKey(2)
+    new = fed.server_round(params, ds, k_round, cfg)
+    ref = _ref_server_round(params, ds, k_round, cfg)
+    assert _max_err(new, ref) <= 1e-10
+
+
+def test_round_parity_with_upload_noise(x64):
+    """The ChannelModel path reproduces the pre-refactor inline
+    perturb_updates call (same k_noise)."""
+    key = jax.random.PRNGKey(3)
+    _, ds, _ = qdata.make_federated_dataset(key, 2, num_nodes=4,
+                                            n_per_node=4, n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(4), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                               nodes_per_round=4, interval_length=1,
+                               eps=0.05, upload_noise=2.0)
+    k_round = jax.random.PRNGKey(5)
+    new = fed.server_round(params, ds, k_round, cfg)
+    ref = _ref_server_round(params, ds, k_round, cfg)
+    assert _max_err(new, ref) <= 1e-10
+
+
+# -------------------------------------------------------- unequal nodes
+def test_unequal_nodes_weights_not_constant():
+    sizes = (2, 4, 6, 8)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(6), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            node_sizes=sizes)
+    assert ds.phi_in.shape == (4, 8, 4)  # padded to max size
+    np.testing.assert_array_equal(np.asarray(ds.n_per), sizes)
+    w = participation.participation_weights(ds.node_counts(), jnp.ones(4))
+    np.testing.assert_allclose(np.asarray(w),
+                               np.asarray(sizes) / np.sum(sizes), atol=1e-7)
+    assert float(jnp.max(w) - jnp.min(w)) > 0.2  # no longer degenerate
+
+
+def test_unequal_interval1_average_equals_centralized(x64):
+    """§III-C generalized: I_l=1 + full participation + TRUE data-volume
+    weights == one centralized step on the union of VALID pairs."""
+    sizes = (2, 4, 6, 8)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(7), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            node_sizes=sizes)
+    params = qnn.init_params(jax.random.PRNGKey(8), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                               nodes_per_round=4, interval_length=1,
+                               eps=0.05, aggregation="average")
+    fed_params = fed.server_round(params, ds, jax.random.PRNGKey(9), cfg)
+
+    mask = np.asarray(ds.valid_mask()).astype(bool)
+    union_in = jnp.asarray(np.asarray(ds.phi_in)[mask])
+    union_out = jnp.asarray(np.asarray(ds.phi_out)[mask])
+    assert union_in.shape[0] == sum(sizes)
+    central, _ = qnn.local_step(params, union_in, union_out, WIDTHS,
+                                1.0, 0.05)
+    # weights stay float32 (bit-parity with the pre-refactor round), so
+    # the N_n/N_t quantization bounds the agreement at ~1e-9, not 1e-12
+    assert _max_err(fed_params, central) <= 5e-9
+
+
+def test_unequal_data_volume_weights_change_the_aggregate(x64):
+    """Forcing equal weights on unequal nodes gives a DIFFERENT
+    aggregate — the weights are load-bearing now."""
+    sizes = (2, 4, 6, 8)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(10), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            node_sizes=sizes)
+    params = qnn.init_params(jax.random.PRNGKey(11), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                               nodes_per_round=4, interval_length=1,
+                               eps=0.05, aggregation="average")
+    node_keys = jax.random.split(jax.random.PRNGKey(12), 4)
+    ks_all = fed._node_batch(params, ds.phi_in, ds.phi_out, node_keys,
+                             ds.valid_mask(), 1.0, 0.05, cfg)
+    w_vol = participation.participation_weights(ds.node_counts(),
+                                                jnp.ones(4))
+    agg_vol = fed.aggregate_average(params, ks_all, w_vol, 0.05)
+    agg_eq = fed.aggregate_average(params, ks_all, jnp.full((4,), 0.25),
+                                   0.05)
+    assert _max_err(agg_vol, agg_eq) > 1e-6
+
+
+def test_unequal_minibatch_draws_only_valid_pairs(x64):
+    """SGD mode on a padded node: the masked minibatch selection must
+    never pick a padding slot (weights would otherwise see zero
+    states)."""
+    sizes = (3, 6)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(13), 2,
+                                            num_nodes=2, n_per_node=4,
+                                            node_sizes=sizes)
+    params = qnn.init_params(jax.random.PRNGKey(14), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=2,
+                               nodes_per_round=2, interval_length=2,
+                               eps=0.05, minibatch=2)
+    out = fed.server_round(params, ds, jax.random.PRNGKey(15), cfg)
+    for p in out:
+        assert bool(ql.is_unitary(p.reshape(-1, p.shape[-1], p.shape[-1])
+                                  [0], atol=1e-8))
+        assert np.all(np.isfinite(np.asarray(p).real))
+
+
+# ------------------------------------------------- schedules end-to-end
+def test_quantum_dropout_all_stragglers_is_identity(x64):
+    """dropout_rate=1.0: every sampled node drops, weights renormalize
+    to zero, the aggregate is the identity update."""
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(16), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(17), WIDTHS)
+    for agg in ("product", "average"):
+        cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                                   nodes_per_round=4, interval_length=2,
+                                   eps=0.1, aggregation=agg,
+                                   participation="dropout",
+                                   dropout_rate=1.0)
+        out = fed.server_round(params, ds, jax.random.PRNGKey(18), cfg)
+        assert _max_err(out, params) <= 1e-10
+
+
+@pytest.mark.parametrize("schedule,kw", [
+    ("dropout", {"dropout_rate": 0.4}),
+    ("weighted", {}),
+])
+def test_quantum_schedules_end_to_end(schedule, kw):
+    """Dropout/straggler and weighted participation run full training
+    rounds on an UNEQUAL dataset through the shared registry; params
+    stay unitary and metrics finite."""
+    sizes = (2, 3, 4, 5, 6, 4, 3, 5)
+    _, ds, test = qdata.make_federated_dataset(jax.random.PRNGKey(19), 2,
+                                               num_nodes=8, n_per_node=4,
+                                               node_sizes=sizes, n_test=8)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8,
+                               nodes_per_round=4, interval_length=2,
+                               eps=0.1, participation=schedule, **kw)
+    params, hist = fed.train(jax.random.PRNGKey(20), cfg, ds, test,
+                             n_iterations=3, eval_every=3)
+    for p in params:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-4))
+    assert np.all(np.isfinite(hist["test_fidelity"]))
+
+
+def test_served_aggregation_close_to_average(x64):
+    """'served' = average over a compressed (bf16 real/imag) wire: close
+    to full-precision average, but measurably lossy."""
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(21), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(22), WIDTHS)
+    outs = {}
+    for agg in ("average", "served"):
+        cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                                   nodes_per_round=4, interval_length=2,
+                                   eps=0.05, aggregation=agg)
+        outs[agg] = fed.server_round(params, ds, jax.random.PRNGKey(23),
+                                     cfg)
+    err = _max_err(outs["average"], outs["served"])
+    assert 0.0 < err < 1e-2  # bf16 wire: ~0.4% relative on the K's
+    for p in outs["served"]:
+        for u in p:
+            assert bool(ql.is_unitary(u, atol=1e-8))  # still exactly unitary
+
+
+# ------------------------------------------------------------- shard_map
+def test_shard_map_fanout_single_device_parity(x64):
+    """fanout='shard_map' under a 1-pod mesh == the vmap fallback (and
+    'auto' without a mesh picks vmap — the single-device fallback)."""
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(24), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(25), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                               nodes_per_round=4, interval_length=2,
+                               eps=0.05)
+    out_vmap = fed.server_round(params, ds, jax.random.PRNGKey(26), cfg)
+    mesh = jax.make_mesh((1,), ("pod",))
+    with mesh:
+        out_sm = fed.server_round(params, ds, jax.random.PRNGKey(26),
+                                  cfg._replace(fanout="shard_map"))
+    assert _max_err(out_vmap, out_sm) <= 1e-10
+
+
+def test_shard_map_requires_mesh():
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=4,
+                               nodes_per_round=4, fanout="shard_map")
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(27), 2,
+                                            num_nodes=4, n_per_node=4,
+                                            n_test=8)
+    params = qnn.init_params(jax.random.PRNGKey(28), WIDTHS)
+    with pytest.raises(ValueError, match="shard_map"):
+        fed.server_round(params, ds, jax.random.PRNGKey(29), cfg)
+
+
+_MULTI_DEVICE_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core.quantum import data as qdata, federated as fed, qnn
+
+WIDTHS = (2, 3, 2)
+_, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(0), 2,
+                                        num_nodes=8, n_per_node=4, n_test=4)
+params = qnn.init_params(jax.random.PRNGKey(1), WIDTHS)
+cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8, nodes_per_round=4,
+                           interval_length=2, eps=0.05)
+key = jax.random.PRNGKey(2)
+out_v = fed.server_round(params, ds, key, cfg)          # no mesh -> vmap
+mesh = jax.make_mesh((2, 2), ("pod", "data"))            # dryrun-style mesh
+with mesh:
+    # fanout='auto' must pick shard_map over the 2-pod axis
+    assert fed._resolve_fanout(cfg) == "shard_map"
+    out_s = fed.server_round(params, ds, key, cfg)
+err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(out_v, out_s))
+assert err <= 1e-10, err
+print("PARITY_OK", err)
+"""
+
+
+def test_shard_map_fanout_multi_device_parity():
+    """The pod-sharded round on a faked 4-device ('pod','data') mesh
+    (the dryrun trick — device count must be set before jax import,
+    hence a subprocess) matches the vmap round to <= 1e-10."""
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    proc = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_CHILD],
+                          capture_output=True, text=True, env=env,
+                          cwd=ROOT, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "PARITY_OK" in proc.stdout

@@ -1,0 +1,187 @@
+"""Unit tests for the shared federation core registries: aggregation
+strategies, participation schedules, and channel models."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fed import channel, participation, strategies
+
+
+# ------------------------------------------------------------ strategies
+def test_aggregation_registry_contents():
+    assert strategies.get_aggregation("product").combine == "product"
+    assert strategies.get_aggregation("average").combine == "average"
+    served = strategies.get_aggregation("served")
+    assert served.combine == "average" and served.wire_dtype is not None
+
+
+def test_aggregation_registry_unknown_fails_loudly():
+    with pytest.raises(ValueError, match="unknown aggregation"):
+        strategies.get_aggregation("bogus")
+
+
+def test_wire_cast_identity_for_full_precision():
+    x = [jnp.arange(8.0).reshape(2, 4)]
+    out = strategies.wire_cast(x, strategies.get_aggregation("average"))
+    assert out[0] is x[0]  # no-op, not even a copy
+
+
+def test_wire_cast_served_compresses_real_and_complex(x64):
+    served = strategies.get_aggregation("served")
+    r = jnp.linspace(0.0, 1.0, 7, dtype=jnp.float32)
+    rc = strategies.wire_cast([r], served)[0]
+    assert rc.dtype == jnp.dtype(served.wire_dtype)
+    # complex uploads round-trip real/imag through the bf16 wire back to
+    # the working dtype: dtype preserved, mantissa truncated
+    c = (jax.random.normal(jax.random.PRNGKey(0), (4, 4))
+         + 1j * jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+         ).astype(jnp.complex128)
+    cc = strategies.wire_cast([c], served)[0]
+    assert cc.dtype == jnp.complex128
+    err = float(jnp.max(jnp.abs(cc - c)))
+    assert 0.0 < err < 0.05  # lossy at the bf16 mantissa level
+
+
+def test_wire_cast_served_lossy_at_default_precision():
+    """The compressed wire must be observable WITHOUT x64 too — a
+    complex64 upload is not a bitwise no-op."""
+    served = strategies.get_aggregation("served")
+    c = (jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+         + 1j * jax.random.normal(jax.random.PRNGKey(3), (8, 8))
+         ).astype(jnp.complex64)
+    cc = strategies.wire_cast([c], served)[0]
+    assert cc.dtype == jnp.complex64
+    assert float(jnp.max(jnp.abs(cc - c))) > 0.0
+
+
+def test_round_weights_pairing_is_unbiased():
+    """Size-proportional sampling pairs with UNIFORM aggregation weights
+    (weighting by N_n twice would bias contributions ~N_n^2); uniform /
+    dropout sampling pairs with data-volume weights."""
+    sizes = jnp.array([2.0, 6.0])
+    ones = jnp.ones(2)
+    np.testing.assert_allclose(
+        np.asarray(participation.round_weights("weighted", sizes, ones)),
+        [0.5, 0.5], atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(participation.round_weights("uniform", sizes, ones)),
+        [0.25, 0.75], atol=1e-7)
+    np.testing.assert_allclose(
+        np.asarray(participation.round_weights(
+            "dropout", sizes, jnp.array([0.0, 1.0]))),
+        [0.0, 1.0], atol=1e-7)
+
+
+# --------------------------------------------------------- participation
+def test_uniform_schedule_bit_compatible_with_plain_choice():
+    """The uniform schedule must reproduce the pre-registry inline
+    ``jax.random.choice`` exactly (same key, same draw)."""
+    key = jax.random.PRNGKey(3)
+    sel, mask = participation.sample_nodes(key, 10, 4)
+    ref = jax.random.choice(key, 10, (4,), replace=False)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(mask), np.ones(4, np.float32))
+
+
+def test_sampling_without_replacement_all_schedules():
+    sizes = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    for schedule in participation.SCHEDULES:
+        for seed in range(5):
+            sel, mask = participation.sample_nodes(
+                jax.random.PRNGKey(seed), 6, 4, schedule=schedule,
+                node_sizes=sizes, dropout_rate=0.5)
+            assert len(set(np.asarray(sel).tolist())) == 4  # no repeats
+            assert mask.shape == (4,)
+
+
+def test_weighted_schedule_prefers_large_nodes():
+    sizes = jnp.array([200.0, 1.0, 1.0, 1.0, 1.0, 1.0])
+    hits = 0
+    for seed in range(100):
+        sel, _ = participation.sample_nodes(
+            jax.random.PRNGKey(seed), 6, 2, schedule="weighted",
+            node_sizes=sizes)
+        hits += int(0 in np.asarray(sel).tolist())
+    assert hits > 80  # node 0 holds ~97% of the data
+
+
+def test_weighted_schedule_requires_sizes():
+    with pytest.raises(ValueError, match="node_sizes"):
+        participation.sample_nodes(jax.random.PRNGKey(0), 4, 2,
+                                   schedule="weighted")
+
+
+def test_dropout_schedule_masks_at_rate():
+    rate, n_trials = 0.3, 400
+    kept = 0.0
+    for seed in range(n_trials):
+        _, mask = participation.sample_nodes(
+            jax.random.PRNGKey(seed), 8, 4, schedule="dropout",
+            dropout_rate=rate)
+        kept += float(jnp.mean(mask))
+    assert abs(kept / n_trials - (1.0 - rate)) < 0.06
+
+
+def test_unknown_schedule_fails_loudly():
+    with pytest.raises(ValueError, match="unknown participation"):
+        participation.sample_nodes(jax.random.PRNGKey(0), 4, 2,
+                                   schedule="round-robin")
+
+
+def test_participation_weights_data_volume_and_renormalization():
+    sizes = jnp.array([2.0, 6.0])
+    w = participation.participation_weights(sizes, jnp.ones(2))
+    np.testing.assert_allclose(np.asarray(w), [0.25, 0.75], atol=1e-7)
+    # a dropped node's weight renormalizes over the survivors
+    w = participation.participation_weights(sizes, jnp.array([1.0, 0.0]))
+    np.testing.assert_allclose(np.asarray(w), [1.0, 0.0], atol=1e-7)
+    # all-dropped round: zero weights (identity aggregate), no NaN
+    w = participation.participation_weights(sizes, jnp.zeros(2))
+    np.testing.assert_allclose(np.asarray(w), [0.0, 0.0], atol=1e-7)
+
+
+# --------------------------------------------------------------- channel
+def test_hermitian_noise_properties(x64):
+    h = channel.hermitian_noise(jax.random.PRNGKey(0), (3, 8, 8),
+                                jnp.complex128)
+    # Hermitian
+    hd = jnp.conjugate(jnp.swapaxes(h, -1, -2))
+    assert float(jnp.max(jnp.abs(h - hd))) < 1e-12
+    # unit Frobenius norm per matrix
+    norms = jnp.sqrt(jnp.sum(jnp.abs(h) ** 2, axis=(-2, -1)))
+    np.testing.assert_allclose(np.asarray(norms), np.ones(3), atol=1e-12)
+
+
+def test_perturb_updates_sigma0_is_identity(x64):
+    k = (jax.random.normal(jax.random.PRNGKey(1), (2, 4, 4))
+         + 1j * jax.random.normal(jax.random.PRNGKey(2), (2, 4, 4)))
+    out = channel.perturb_updates(jax.random.PRNGKey(3), [k], 0.0)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(k))
+
+
+def test_perturb_updates_relative_frobenius_scale(x64):
+    sigma = 0.5
+    k = (jax.random.normal(jax.random.PRNGKey(4), (3, 8, 8))
+         + 1j * jax.random.normal(jax.random.PRNGKey(5), (3, 8, 8)))
+    out = channel.perturb_updates(jax.random.PRNGKey(6), [k], sigma)[0]
+    d_norm = jnp.sqrt(jnp.sum(jnp.abs(out - k) ** 2, axis=(-2, -1)))
+    k_norm = jnp.sqrt(jnp.sum(jnp.abs(k) ** 2, axis=(-2, -1)))
+    np.testing.assert_allclose(np.asarray(d_norm / k_norm),
+                               np.full(3, sigma), rtol=1e-10)
+
+
+def test_channel_registry():
+    ident = channel.make_channel("identity")
+    x = [jnp.ones((2, 2), jnp.complex64)]
+    assert ident(jax.random.PRNGKey(0), x)[0] is x[0]
+    herm = channel.make_channel("hermitian", sigma=1.0)
+    assert isinstance(herm, channel.HermitianNoiseChannel)
+    with pytest.raises(ValueError, match="unknown channel"):
+        channel.make_channel("erasure")
+
+
+def test_channel_noise_shim_reexports():
+    from repro.core.quantum import channel_noise
+    assert channel_noise.hermitian_noise is channel.hermitian_noise
+    assert channel_noise.perturb_updates is channel.perturb_updates

@@ -107,6 +107,32 @@ def test_noise_pollution_shapes_and_effect():
     assert 0.4 <= frac <= 0.6
 
 
+def test_pollute_ceil_boundary():
+    """The noisy count is ceil(ratio*N_n) — the docstring's contract.
+    ratio=0.125 on 4 pairs/node must pollute exactly ONE pair (the old
+    int(round(...)) gave zero), and per-node counts are honored."""
+    key = jax.random.PRNGKey(30)
+    u = qdata.make_target_unitary(key, 2)
+    phi_in, phi_out = qdata.make_pairs(jax.random.PRNGKey(31), u, 12, 2)
+    ds = qdata.partition_non_iid(phi_in, phi_out, 3)  # (3, 4, 4)
+
+    def n_noisy_per_node(ratio, counts=None):
+        noisy_in, _ = qdata.pollute(jax.random.PRNGKey(32), ds.phi_in,
+                                    ds.phi_out, ratio, 2, counts=counts)
+        diff = np.asarray(jnp.any(jnp.abs(noisy_in - ds.phi_in) > 1e-9,
+                                  axis=-1))
+        return diff.sum(axis=1)
+
+    np.testing.assert_array_equal(n_noisy_per_node(0.125), [1, 1, 1])
+    np.testing.assert_array_equal(n_noisy_per_node(0.5), [2, 2, 2])
+    # exact boundaries must not round up (0.3*10 in f32 is 3.0000001)
+    np.testing.assert_array_equal(
+        n_noisy_per_node(0.3, counts=jnp.array([4, 4, 4])), [2, 2, 2])
+    # unequal true counts: ceil(0.3*1)=1, ceil(0.3*2)=1, ceil(0.3*4)=2
+    np.testing.assert_array_equal(
+        n_noisy_per_node(0.3, counts=jnp.array([1, 2, 4])), [1, 1, 2])
+
+
 def test_non_iid_partition_sorted():
     key = jax.random.PRNGKey(13)
     u = qdata.make_target_unitary(key, 2)
