@@ -14,8 +14,7 @@ import time
 import jax
 
 from repro.configs import qnn_232
-from repro.core.quantum import data as qdata
-from repro.core.quantum import federated as fed
+from repro.core.fed import api
 
 WIDTHS = qnn_232.WIDTHS
 N_NODES, N_PER_ROUND, N_PER_NODE = 100, 10, 4
@@ -23,14 +22,13 @@ ITERS = 30
 
 
 def run(iid: bool, interval: int, seed: int = 42):
-    key = jax.random.PRNGKey(seed)
-    _, ds, test = qdata.make_federated_dataset(
-        key, 2, num_nodes=N_NODES, n_per_node=N_PER_NODE, iid=iid,
-        n_test=32)
-    cfg = qnn_232.config(interval_length=interval)
+    spec = api.FedSpec.from_quantum_config(
+        qnn_232.config(interval_length=interval),
+        n_per_node=N_PER_NODE, n_test=32, data_seed=seed, data_iid=iid)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(7),
+                                        rounds=ITERS)
     t0 = time.time()
-    _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
-                        n_iterations=ITERS, eval_every=ITERS)
+    hist = sess.run(ITERS, callbacks=[api.EvalEvery(ITERS)])
     return hist, time.time() - t0
 
 

@@ -10,8 +10,7 @@ import time
 import jax
 
 from repro.configs import qnn_232
-from repro.core.quantum import data as qdata
-from repro.core.quantum import federated as fed
+from repro.core.fed import api
 
 WIDTHS = qnn_232.WIDTHS
 N_NODES, N_PER_ROUND, N_PER_NODE = 100, 10, 4
@@ -19,13 +18,16 @@ ITERS = 50
 
 
 def run(interval: int, minibatch=None, iters: int = ITERS, seed: int = 42):
-    key = jax.random.PRNGKey(seed)
-    _, ds, test = qdata.make_federated_dataset(
-        key, 2, num_nodes=N_NODES, n_per_node=N_PER_NODE, n_test=32)
-    cfg = qnn_232.config(interval_length=interval, minibatch=minibatch)
+    # spec = experiment + data recipe; create(..., rounds=iters) installs
+    # the legacy fed.train key plan so trajectories match the old loop
+    spec = api.FedSpec.from_quantum_config(
+        qnn_232.config(interval_length=interval, minibatch=minibatch),
+        n_per_node=N_PER_NODE, n_test=32, data_seed=seed)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(7),
+                                        rounds=iters)
     t0 = time.time()
-    _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
-                        n_iterations=iters, eval_every=max(iters // 5, 1))
+    hist = sess.run(iters,
+                    callbacks=[api.EvalEvery(max(iters // 5, 1))])
     return hist, time.time() - t0
 
 

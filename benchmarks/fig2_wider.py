@@ -13,22 +13,20 @@ import time
 import jax
 
 from repro.configs import qnn_232
-from repro.core.quantum import data as qdata
-from repro.core.quantum import federated as fed
+from repro.core.fed import api
 
 ITERS = 40
 
 
 def run(widths, n_nodes=20, n_per_round=5, n_per_node=6, seed=42):
-    key = jax.random.PRNGKey(seed)
-    _, ds, test = qdata.make_federated_dataset(
-        key, widths[0], num_nodes=n_nodes, n_per_node=n_per_node,
-        n_test=24)
-    cfg = qnn_232.config(widths=widths, num_nodes=n_nodes,
-                         nodes_per_round=n_per_round, interval_length=2)
+    spec = api.FedSpec.from_quantum_config(
+        qnn_232.config(widths=widths, num_nodes=n_nodes,
+                       nodes_per_round=n_per_round, interval_length=2),
+        n_per_node=n_per_node, n_test=24, data_seed=seed)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(7),
+                                        rounds=ITERS)
     t0 = time.time()
-    _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
-                        n_iterations=ITERS, eval_every=ITERS // 4)
+    hist = sess.run(ITERS, callbacks=[api.EvalEvery(ITERS // 4)])
     return hist, time.time() - t0
 
 

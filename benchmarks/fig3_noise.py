@@ -10,8 +10,7 @@ import time
 import jax
 
 from repro.configs import qnn_232
-from repro.core.quantum import data as qdata
-from repro.core.quantum import federated as fed
+from repro.core.fed import api
 
 WIDTHS = qnn_232.WIDTHS
 N_NODES, N_PER_ROUND, N_PER_NODE = 100, 10, 4
@@ -20,14 +19,14 @@ RATIOS = (0.1, 0.3, 0.5, 0.7, 0.9)
 
 
 def run(noise: float, iters: int = ITERS, seed: int = 42):
-    key = jax.random.PRNGKey(seed)
-    _, ds, test = qdata.make_federated_dataset(
-        key, 2, num_nodes=N_NODES, n_per_node=N_PER_NODE,
-        noise_ratio=noise, n_test=32)
-    cfg = qnn_232.config(interval_length=2)
+    spec = api.FedSpec.from_quantum_config(
+        qnn_232.config(interval_length=2),
+        n_per_node=N_PER_NODE, n_test=32, data_seed=seed,
+        data_noise=noise)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(7),
+                                        rounds=iters)
     t0 = time.time()
-    _, hist = fed.train(jax.random.PRNGKey(7), cfg, ds, test,
-                        n_iterations=iters, eval_every=iters)
+    hist = sess.run(iters, callbacks=[api.EvalEvery(iters)])
     return hist, time.time() - t0
 
 

@@ -3,6 +3,11 @@ updates + weighted delta aggregation (the Lemma-1 additive form) —
 i.e. local-SGD / DiLoCo, with the pod axis as the federation axis in
 production (see launch/fed_train.py and the fed dry-run).
 
+Driven through the federation front-door: the same ``FedSpec`` /
+``FederationSession`` API as the quantum quickstart, with the
+``"full"`` participation schedule (every node, every round, identity
+order) so per-node optimizer state stays aligned with its node.
+
 This example shows the communication/interval trade-off the paper's
 §III-D.2 claims: larger I_l means fewer synchronizations for the same
 number of local steps, at (near) equal loss.
@@ -10,40 +15,24 @@ number of local steps, at (near) equal loss.
     PYTHONPATH=src python examples/fed_llm_local_sgd.py
 """
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.core.fed import FederatedConfig, fed_train_round
-from repro.data import partition_non_iid, token_batches
-from repro.models import Model
-from repro.optim import AdamW
+from repro.core.fed import api
 
 NODES = 4
 TOTAL_LOCAL_STEPS = 8
 
 
 def run(interval: int):
-    cfg = get_config("qwen1.5-4b").reduced(n_layers=2)
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    opt = AdamW(weight_decay=0.0)
-    loss_fn = lambda p, b: model.loss_fn(p, b)
-    fed_cfg = FederatedConfig(num_nodes=NODES, interval_length=interval)
-    data = token_batches(cfg, NODES * 4 * interval, 64, seed=1)
-    eval_batch = next(token_batches(cfg, 8, 64, seed=99))
-
-    opt_nodes = jax.vmap(lambda _: opt.init(params))(jnp.arange(NODES))
+    spec = api.FedSpec.classical(
+        arch="qwen1.5-4b", n_layers=2,
+        num_nodes=NODES, nodes_per_round=NODES,
+        interval_length=interval, participation="full",
+        lr=3e-3, node_batch=4, node_pool_seqs=4 * interval,
+        seq_len=64, data_seed=1)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(0))
     rounds = TOTAL_LOCAL_STEPS // interval
-    for _ in range(rounds):
-        pool = next(data)
-        nodes = partition_non_iid(pool, NODES)
-        node_batches = jax.tree.map(
-            lambda x: x.reshape((NODES, interval, x.shape[1] // interval)
-                                + x.shape[2:]), nodes)
-        params, opt_nodes, _ = fed_train_round(
-            loss_fn, opt, params, opt_nodes, node_batches, 3e-3, fed_cfg)
-    loss = float(loss_fn(params, eval_batch)[0])
-    return loss, rounds
+    hist = sess.run(rounds, callbacks=[api.EvalEvery(rounds)])
+    return hist["eval_loss"][-1], rounds
 
 
 def main():

@@ -1,1 +1,2 @@
-from repro.checkpoint.checkpoint import restore, save  # noqa: F401
+from repro.checkpoint.checkpoint import (  # noqa: F401
+    restore, save, unflatten_like)

@@ -32,11 +32,45 @@ def _flatten(tree, prefix="") -> Dict[str, Any]:
     return flat
 
 
+def unflatten_like(template, flat: Dict[str, Any], prefix: str = ""):
+    """Exact inverse of ``_flatten`` given a structural template.
+
+    ``template`` is any pytree of the same STRUCTURE as what was saved
+    (dicts / lists / tuples / NamedTuples / None / array-likes, e.g.
+    from ``jax.eval_shape``); leaf values are looked up in ``flat`` by
+    the keys ``_flatten`` would have produced. Missing keys fail loudly.
+    """
+    if isinstance(template, dict):
+        return {k: unflatten_like(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (list, tuple)) and not hasattr(template,
+                                                           "shape"):
+        vals = [unflatten_like(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        if isinstance(template, tuple):
+            # NamedTuples rebuild through their constructor
+            return (type(template)(*vals) if hasattr(template, "_fields")
+                    else tuple(vals))
+        return vals
+    if template is None:
+        return None
+    key = prefix[:-1]
+    if key not in flat:
+        raise KeyError(f"checkpoint is missing {key!r}; have "
+                       f"{sorted(flat)[:8]}...")
+    return jnp.asarray(flat[key])
+
+
+_META_KEY = "__meta__"
+
+
 def save(path: str, params: Dict[str, jax.Array], *, step: int = 0,
          extra: Optional[Dict[str, Any]] = None,
          specs: Optional[Dict[str, str]] = None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
     flat = _flatten(params)
+    if _META_KEY in flat:
+        raise ValueError(f"param key {_META_KEY!r} is reserved")
     arrays = {}
     meta = {"step": step, "extra": extra or {}, "specs": specs or {},
             "dtypes": {}}
@@ -46,14 +80,22 @@ def save(path: str, params: Dict[str, jax.Array], *, step: int = 0,
             meta["dtypes"][k] = "bfloat16"
             arr = arr.view(np.uint16)
         arrays[k] = arr
+    # meta rides INSIDE the npz so the single atomic rename keeps arrays
+    # and metadata consistent even on a kill mid-save; the json sidecar
+    # is a best-effort human-readable copy
+    meta_blob = json.dumps(meta).encode()
+    arrays[_META_KEY] = np.frombuffer(meta_blob, dtype=np.uint8)
     d = os.path.dirname(os.path.abspath(path))
     with tempfile.NamedTemporaryFile(dir=d, suffix=".npz",
                                      delete=False) as f:
         np.savez(f, **arrays)
         tmp = f.name
     os.replace(tmp, path)
-    with open(path + ".meta.json", "w") as f:
+    with tempfile.NamedTemporaryFile(dir=d, suffix=".json", mode="w",
+                                     delete=False) as f:
         json.dump(meta, f)
+        tmp = f.name
+    os.replace(tmp, path + ".meta.json")
 
 
 def restore(path: str, shardings: Optional[Dict[str, Any]] = None
@@ -61,7 +103,9 @@ def restore(path: str, shardings: Optional[Dict[str, Any]] = None
     with np.load(path) as z:
         arrays = {k: z[k] for k in z.files}
     meta = {"step": 0, "extra": {}, "specs": {}, "dtypes": {}}
-    if os.path.exists(path + ".meta.json"):
+    if _META_KEY in arrays:  # authoritative (atomic with the arrays)
+        meta = json.loads(arrays.pop(_META_KEY).tobytes().decode())
+    elif os.path.exists(path + ".meta.json"):  # pre-embed checkpoints
         with open(path + ".meta.json") as f:
             meta = json.load(f)
     out = {}

@@ -14,9 +14,16 @@ One place for the pieces every QuanFedPS round is made of:
 
 The quantum stack (``repro.core.quantum.federated``) consumes the same
 three registries for its unitary-update rounds.
+
+``api`` is the federation FRONT-DOOR both stacks share: ``FedSpec``
+(one declarative, registry-validated config with JSON round-trip),
+the ``Substrate`` protocol (quantum / classical behind one face), and
+``FederationSession`` (step/run with hooks, checkpoint, bit-exact
+resume). New drivers should start there.
 """
 from repro.core.fed import channel, participation, strategies  # noqa: F401
 from repro.core.fed.config import FederatedConfig  # noqa: F401
 from repro.core.fed.fed_step import (  # noqa: F401
     fed_params_axes, fed_train_round, replicate_for_pods)
 from repro.core.fed.local import local_steps  # noqa: F401
+from repro.core.fed import api  # noqa: E402,F401  (after the registries)

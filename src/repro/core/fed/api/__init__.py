@@ -1,0 +1,22 @@
+"""The federation front-door: one declarative spec, one substrate
+protocol, one resumable session — shared by the quantum and classical
+stacks.
+
+    from repro.core.fed import api
+
+    spec = api.FedSpec.quantum(widths=(2, 3, 2), num_nodes=100,
+                               nodes_per_round=10, interval_length=2,
+                               n_per_node=4, data_seed=42)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(7))
+    sess.run(50, callbacks=[api.EvalEvery(10, verbose=True),
+                            api.Checkpointer("fed.npz", every=10)])
+    # later / elsewhere:
+    sess = api.FederationSession.resume("fed.npz")
+    sess.run(50)   # continues bit-exactly
+"""
+from repro.core.fed.api.session import (  # noqa: F401
+    Callback, Checkpointer, EarlyStop, EvalEvery, FederationSession,
+    MetricStream, sequential_split_plan)
+from repro.core.fed.api.spec import SPEC_VERSION, FedSpec  # noqa: F401
+from repro.core.fed.api.substrate import (  # noqa: F401
+    ClassicalSubstrate, QuantumSubstrate, Substrate, make_substrate)

@@ -1,0 +1,230 @@
+"""``FedSpec`` — the one declarative federation config both stacks share.
+
+A spec says WHAT federation to run: the substrate ("quantum" |
+"classical"), the Alg. 1/2 shape (N, N_p, I_l), the strategy names
+(aggregation / participation / channel — validated against the shared
+``core/fed`` registries at construction, so a typo fails before any
+tracing), the substrate-specific knobs, and an optional DATA RECIPE
+that lets ``make_substrate`` rebuild the exact training data from the
+spec alone (which is what makes a checkpointed federation resumable
+from nothing but the checkpoint file).
+
+Specs travel: ``to_json``/``from_json`` round-trip losslessly, so a
+spec rides inside checkpoint metadata and ``--spec`` CLI files. The
+legacy per-stack config types (``QuantumFedConfig``,
+``FederatedConfig``) remain as deprecated shims with lossless
+converters both ways.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.fed import channel as fchannel
+from repro.core.fed import participation, strategies
+from repro.core.fed.config import FederatedConfig
+
+SPEC_VERSION = 1
+SUBSTRATES = ("quantum", "classical")
+
+# fields whose JSON lists must come back as tuples
+_TUPLE_FIELDS = ("widths", "node_sizes")
+
+
+@dataclasses.dataclass(frozen=True)
+class FedSpec:
+    """Declarative federation spec (see module docstring).
+
+    Construct through ``FedSpec.quantum(...)`` / ``FedSpec.classical(...)``
+    — they pick the right defaults for the substrate; direct construction
+    validates identically.
+    """
+    substrate: str
+    # --- Alg. 1/2 shape + shared strategy names ------------------------
+    num_nodes: int = 2            # N
+    nodes_per_round: int = 2      # N_p
+    interval_length: int = 1      # I_l
+    aggregation: str = "average"      # strategy registry
+    participation: str = "uniform"    # schedule registry
+    dropout_rate: float = 0.0
+    # --- quantum substrate --------------------------------------------
+    widths: Optional[Tuple[int, ...]] = None
+    eta: float = 1.0
+    eps: float = 0.1
+    minibatch: Optional[int] = None
+    upload_noise: float = 0.0     # channel registry: >0 => "hermitian"
+    engine: str = "local"
+    impl: str = "xla"
+    fanout: str = "auto"
+    # --- classical substrate ------------------------------------------
+    arch: Optional[str] = None    # model config name (repro.configs)
+    n_layers: Optional[int] = None  # reduced(n_layers=...) override
+    lr: float = 3e-3              # inner (node) learning rate
+    outer_lr: float = 1.0
+    delta_dtype: str = "float32"
+    node_batch: int = 4           # per-node batch per local step
+    node_pool_seqs: Optional[int] = None  # per-node sequences per round
+    seq_len: int = 64
+    # --- data recipe (lets make_substrate rebuild the data) -----------
+    data_seed: int = 0
+    data_iid: bool = False
+    data_noise: float = 0.0       # quantum pair pollution ratio
+    n_per_node: Optional[int] = None   # quantum pairs per node
+    node_sizes: Optional[Tuple[int, ...]] = None  # unequal quantum nodes
+    n_test: int = 32
+    eval_batch: int = 8           # classical eval batch size
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.substrate not in SUBSTRATES:
+            raise ValueError(f"unknown substrate {self.substrate!r}; "
+                             f"registered: {list(SUBSTRATES)}")
+        # fail-loud registry validation at construction time
+        agg = strategies.get_aggregation(self.aggregation)
+        participation.validate(self.participation)
+        fchannel.make_channel(
+            "hermitian" if self.upload_noise > 0.0 else "identity",
+            sigma=self.upload_noise)
+        if not (1 <= self.nodes_per_round <= self.num_nodes):
+            raise ValueError(
+                f"need 1 <= nodes_per_round ({self.nodes_per_round}) <= "
+                f"num_nodes ({self.num_nodes})")
+        if self.interval_length < 1:
+            raise ValueError(f"interval_length must be >= 1, got "
+                             f"{self.interval_length}")
+        if not 0.0 <= self.dropout_rate < 1.0:
+            raise ValueError(f"dropout_rate must be in [0, 1), got "
+                             f"{self.dropout_rate}")
+        if self.node_sizes is not None:
+            if len(self.node_sizes) != self.num_nodes:
+                raise ValueError(
+                    f"node_sizes has {len(self.node_sizes)} entries for "
+                    f"num_nodes={self.num_nodes}")
+            if any(int(s) < 1 for s in self.node_sizes):
+                raise ValueError(f"node_sizes must be positive: "
+                                 f"{self.node_sizes}")
+        if (self.participation == "full"
+                and self.nodes_per_round != self.num_nodes):
+            raise ValueError(
+                f"'full' participation needs nodes_per_round "
+                f"({self.nodes_per_round}) == num_nodes ({self.num_nodes})")
+        if self.substrate == "quantum":
+            if not self.widths or len(self.widths) < 2:
+                raise ValueError("quantum spec needs widths with >= 2 "
+                                 f"layers, got {self.widths!r}")
+            if any(int(w) < 1 for w in self.widths):
+                raise ValueError(f"widths must be positive: {self.widths}")
+            if self.engine not in ("local", "dense"):
+                raise ValueError(f"unknown engine {self.engine!r}")
+            if self.impl not in ("xla", "pallas"):
+                raise ValueError(f"unknown impl {self.impl!r}")
+            if self.fanout not in ("auto", "vmap", "shard_map"):
+                raise ValueError(f"unknown fanout {self.fanout!r}")
+            if self.minibatch is not None and self.minibatch < 1:
+                raise ValueError(f"minibatch must be positive, got "
+                                 f"{self.minibatch}")
+        else:
+            # the classical substrate aggregates additive deltas — the
+            # multiplicative Eq. 6 form does not exist for it
+            if agg.combine != "average":
+                raise ValueError(
+                    f"classical substrate needs an additive aggregation; "
+                    f"{self.aggregation!r} (combine={agg.combine!r}) is "
+                    "quantum-only")
+
+    # -- constructors ---------------------------------------------------
+    @classmethod
+    def quantum(cls, widths: Tuple[int, ...], *, aggregation: str = "product",
+                **kw) -> "FedSpec":
+        """A quantum federation spec (paper defaults: Eq. 6 product)."""
+        return cls(substrate="quantum", widths=tuple(int(w) for w in widths),
+                   aggregation=aggregation, **kw)
+
+    @classmethod
+    def classical(cls, arch: str, **kw) -> "FedSpec":
+        """A classical (LM / pytree-model) federation spec."""
+        return cls(substrate="classical", arch=arch, **kw)
+
+    # -- JSON round-trip ------------------------------------------------
+    def to_json_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        for f in _TUPLE_FIELDS:
+            if d[f] is not None:
+                d[f] = list(d[f])
+        d["version"] = SPEC_VERSION
+        return d
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_json_dict(), indent=indent,
+                          sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob) -> "FedSpec":
+        """Rebuild a spec from ``to_json`` output (str or dict)."""
+        d = dict(json.loads(blob) if isinstance(blob, str) else blob)
+        version = d.pop("version", SPEC_VERSION)
+        if version > SPEC_VERSION:
+            raise ValueError(f"spec version {version} is newer than this "
+                             f"code ({SPEC_VERSION})")
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown FedSpec fields: {sorted(unknown)}")
+        for f in _TUPLE_FIELDS:
+            if d.get(f) is not None:
+                d[f] = tuple(int(x) for x in d[f])
+        return cls(**d)
+
+    # -- lossless legacy-config converters ------------------------------
+    def to_quantum_config(self):
+        """The legacy ``QuantumFedConfig`` this spec denotes."""
+        from repro.core.quantum.federated import QuantumFedConfig
+        if self.substrate != "quantum":
+            raise ValueError("not a quantum spec")
+        return QuantumFedConfig(
+            widths=self.widths, num_nodes=self.num_nodes,
+            nodes_per_round=self.nodes_per_round,
+            interval_length=self.interval_length, eta=self.eta,
+            eps=self.eps, minibatch=self.minibatch,
+            aggregation=self.aggregation, upload_noise=self.upload_noise,
+            engine=self.engine, impl=self.impl,
+            participation=self.participation,
+            dropout_rate=self.dropout_rate, fanout=self.fanout)
+
+    @classmethod
+    def from_quantum_config(cls, cfg, **data_recipe) -> "FedSpec":
+        """Lossless lift of a legacy ``QuantumFedConfig``; data-recipe
+        fields (n_per_node, data_seed, ...) ride along as kwargs."""
+        return cls.quantum(
+            widths=cfg.widths, num_nodes=cfg.num_nodes,
+            nodes_per_round=cfg.nodes_per_round,
+            interval_length=cfg.interval_length, eta=cfg.eta, eps=cfg.eps,
+            minibatch=cfg.minibatch, aggregation=cfg.aggregation,
+            upload_noise=cfg.upload_noise, engine=cfg.engine,
+            impl=cfg.impl, participation=cfg.participation,
+            dropout_rate=cfg.dropout_rate, fanout=cfg.fanout,
+            **data_recipe)
+
+    def to_classical_config(self) -> FederatedConfig:
+        """The legacy ``FederatedConfig`` this spec denotes."""
+        if self.substrate != "classical":
+            raise ValueError("not a classical spec")
+        return FederatedConfig(
+            num_nodes=self.num_nodes, nodes_per_round=self.nodes_per_round,
+            interval_length=self.interval_length,
+            aggregation=self.aggregation, participation=self.participation,
+            dropout_rate=self.dropout_rate, outer_lr=self.outer_lr,
+            delta_dtype=self.delta_dtype)
+
+    @classmethod
+    def from_classical_config(cls, cfg: FederatedConfig, arch: str,
+                              **extra) -> "FedSpec":
+        """Lossless lift of a legacy ``FederatedConfig`` (which never
+        carried the model arch — pass it explicitly)."""
+        return cls.classical(
+            arch=arch, num_nodes=cfg.num_nodes,
+            nodes_per_round=cfg.nodes_per_round,
+            interval_length=cfg.interval_length,
+            aggregation=cfg.aggregation, participation=cfg.participation,
+            dropout_rate=cfg.dropout_rate, outer_lr=cfg.outer_lr,
+            delta_dtype=cfg.delta_dtype, **extra)

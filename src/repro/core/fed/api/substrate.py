@@ -1,0 +1,279 @@
+"""``Substrate`` — what a federation round runs ON.
+
+The session drives federations through this four-method protocol and
+never branches on which physics it is driving:
+
+* ``init_state(key, params=None)`` — build the opaque federation state
+  (global model + whatever per-node state the substrate keeps).
+* ``run_round(state, key, round)`` — one QuanFedPS synchronization
+  iteration (Alg. 1 + Alg. 2); returns ``(new_state, metrics)``.
+* ``evaluate(state)`` — metric dict of PYTHON floats, pulled from the
+  device in ONE ``jax.device_get`` (a single host sync per record, not
+  one blocking ``float(...)`` per metric).
+* ``state_flat(state)`` / ``state_restore(flat)`` — the checkpoint
+  boundary: a nested tree of arrays for ``repro.checkpoint`` and its
+  exact inverse.
+
+``QuantumSubstrate`` wraps ``core/quantum/federated.server_round`` /
+``evaluate``; ``ClassicalSubstrate`` wraps ``core/fed/fed_step.
+fed_train_round`` plus the per-node inner-optimizer state. Both can be
+built from a ``FedSpec`` alone via ``make_substrate`` when the spec
+carries a data recipe — which is what lets ``FederationSession.resume``
+reconstruct a federation from nothing but a checkpoint file.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fed import participation
+from repro.core.fed.api.spec import FedSpec
+from repro.core.fed.fed_step import fed_train_round
+
+
+class Substrate(Protocol):
+    """The physics-agnostic face a federation session drives."""
+
+    spec: FedSpec
+
+    def init_state(self, key: jax.Array, params: Any = None) -> Any:
+        ...
+
+    def run_round(self, state: Any, key: jax.Array, round: int
+                  ) -> Tuple[Any, Dict[str, Any]]:
+        ...
+
+    def evaluate(self, state: Any) -> Dict[str, float]:
+        ...
+
+    def state_flat(self, state: Any) -> Dict[str, Any]:
+        ...
+
+    def state_restore(self, flat: Dict[str, Any]) -> Any:
+        ...
+
+
+def _device_get_floats(tree) -> Dict[str, float]:
+    """One host transfer for a (possibly nested) dict of scalars."""
+    host = jax.device_get(tree)
+    flat = {}
+
+    def walk(prefix, t):
+        if isinstance(t, dict):
+            for k, v in t.items():
+                walk(f"{prefix}{k}" if not prefix else f"{prefix}_{k}", v)
+        else:
+            flat[prefix] = float(t)
+
+    walk("", host)
+    return flat
+
+
+class QuantumSubstrate:
+    """QuanFedPS on the dissipative-QNN simulator (Alg. 1/2 proper).
+
+    State is the QNN params: a list of per-layer stacked complex
+    unitaries. Pass ``dataset``/``test`` explicitly, or leave them None
+    to rebuild both from the spec's data recipe (deterministic in
+    ``spec.data_seed``).
+    """
+
+    def __init__(self, spec: FedSpec, dataset=None,
+                 test: Optional[Tuple[jax.Array, jax.Array]] = None):
+        from repro.core.quantum import data as qdata
+
+        if spec.substrate != "quantum":
+            raise ValueError(f"QuantumSubstrate needs a quantum spec, got "
+                             f"{spec.substrate!r}")
+        self.spec = spec
+        self.cfg = spec.to_quantum_config()
+        if (dataset is None) != (test is None):
+            # regenerating one half from the recipe would pair it with a
+            # DIFFERENT hidden target unitary than the provided half
+            raise ValueError("pass both dataset= and test= (same target "
+                             "unitary) or neither")
+        if dataset is None:
+            if spec.n_per_node is None and spec.node_sizes is None:
+                raise ValueError(
+                    "spec carries no data recipe (n_per_node / node_sizes)"
+                    " — pass dataset= and test= explicitly")
+            _, dataset, test = qdata.make_federated_dataset(
+                jax.random.PRNGKey(spec.data_seed), int(spec.widths[0]),
+                num_nodes=spec.num_nodes, n_per_node=spec.n_per_node or 0,
+                noise_ratio=spec.data_noise, iid=spec.data_iid,
+                n_test=spec.n_test, node_sizes=spec.node_sizes)
+        self.dataset = dataset
+        self.test = test
+        # flattened train view for evaluation (padded slots masked out)
+        self._train_in = dataset.phi_in.reshape(-1, dataset.phi_in.shape[-1])
+        self._train_out = dataset.phi_out.reshape(
+            -1, dataset.phi_out.shape[-1])
+        vmask = dataset.valid_mask()
+        self._train_w = None if vmask is None else vmask.reshape(-1)
+
+    def init_state(self, key: jax.Array, params: Any = None):
+        from repro.core.quantum import qnn
+        if params is not None:
+            return params
+        return qnn.init_params(key, self.spec.widths)
+
+    def run_round(self, state, key, round):
+        from repro.core.quantum import federated as fed
+        del round  # the quantum round is pure in (state, key)
+        return fed.server_round(state, self.dataset, key, self.cfg), {}
+
+    def evaluate(self, state) -> Dict[str, float]:
+        from repro.core.quantum import federated as fed
+        tr = fed.evaluate(state, self._train_in, self._train_out,
+                          self.spec.widths, impl=self.spec.impl,
+                          weights=self._train_w)
+        te = fed.evaluate(state, self.test[0], self.test[1],
+                          self.spec.widths, impl=self.spec.impl)
+        return _device_get_floats({"train": tr, "test": te})
+
+    def state_flat(self, state) -> Dict[str, Any]:
+        return {"params": list(state)}
+
+    def state_restore(self, flat: Dict[str, Any]):
+        n_layers = len(self.spec.widths) - 1
+        return [jnp.asarray(flat[f"params/{i}"]) for i in range(n_layers)]
+
+
+class ClassicalSubstrate:
+    """QuanFedPS's classical limit: I_l local optimizer steps per node +
+    weighted delta aggregation (``fed_train_round``) on a pytree model.
+
+    State is ``{"params": model params, "opt": per-node inner optimizer
+    states}``. Data is a deterministic per-round pool stream rebuilt
+    from the spec (seeded ``token_batches``), so a resumed substrate
+    fast-forwards the stream to the checkpointed round and continues
+    bit-exactly.
+    """
+
+    def __init__(self, spec: FedSpec, model=None, opt=None):
+        from repro.configs import get_config
+        from repro.models import Model
+        from repro.optim import AdamW
+
+        if spec.substrate != "classical":
+            raise ValueError(f"ClassicalSubstrate needs a classical spec, "
+                             f"got {spec.substrate!r}")
+        if spec.arch is None:
+            raise ValueError("classical spec needs arch")
+        self.spec = spec
+        reduced_kw = {} if spec.n_layers is None else {
+            "n_layers": spec.n_layers}
+        self.cfg = get_config(spec.arch).reduced(**reduced_kw)
+        self.model = model if model is not None else Model(self.cfg)
+        self.opt = opt if opt is not None else AdamW(weight_decay=0.0)
+        self.loss_fn = lambda p, b: self.model.loss_fn(p, b)
+        from repro.core.fed.config import FederatedConfig
+        # fed_train_round sees only the SELECTED nodes: its num_nodes is
+        # the per-round count N_p, not the global N
+        self.fed_cfg = FederatedConfig(
+            num_nodes=spec.nodes_per_round,
+            nodes_per_round=spec.nodes_per_round,
+            interval_length=spec.interval_length,
+            aggregation=spec.aggregation,
+            participation=spec.participation,
+            dropout_rate=spec.dropout_rate, outer_lr=spec.outer_lr,
+            delta_dtype=spec.delta_dtype)
+        self._pool_seqs = spec.node_pool_seqs or spec.node_batch * 2
+        # unequal nodes: the pool must cover the requested true volumes
+        self._pool_total = (sum(spec.node_sizes) if spec.node_sizes
+                            else spec.num_nodes * self._pool_seqs)
+        self._data = None
+        self._pos = 0
+        from repro.data import token_batches
+        self.eval_batch = next(token_batches(
+            self.cfg, spec.eval_batch, spec.seq_len,
+            seed=spec.data_seed + 99))
+
+    def init_state(self, key: jax.Array, params: Any = None):
+        if params is None:
+            params = self.model.init(key)
+        opt_nodes = jax.vmap(lambda _: self.opt.init(params))(
+            jnp.arange(self.spec.nodes_per_round))
+        return {"params": params, "opt": opt_nodes}
+
+    def _pool(self, round: int):
+        """The round's global data pool — the ``round``-th item of the
+        seeded stream, regardless of what was consumed before (rewinds
+        by recreating the iterator, fast-forwards by draining it)."""
+        from repro.data import token_batches
+        if self._data is None or self._pos > round:
+            self._data = token_batches(
+                self.cfg, self._pool_total, self.spec.seq_len,
+                seed=self.spec.data_seed)
+            self._pos = 0
+        while self._pos < round:
+            next(self._data)
+            self._pos += 1
+        pool = next(self._data)
+        self._pos += 1
+        return pool
+
+    def run_round(self, state, key, round):
+        from repro.data import partition_iid, partition_non_iid
+        from repro.data.partition import node_token_counts
+
+        spec = self.spec
+        pool = self._pool(round)
+        nodes = (partition_iid(pool, spec.num_nodes,
+                               seed=spec.data_seed + round,
+                               node_seqs=spec.node_sizes)
+                 if spec.data_iid else
+                 partition_non_iid(pool, spec.num_nodes,
+                                   node_seqs=spec.node_sizes))
+        # TRUE per-node token counts from the partition (Alg. 2's N_n) —
+        # weighted participation / data-volume rounds see real volumes
+        node_tokens = node_token_counts(nodes)
+        nodes.pop("n_seqs", None)  # counts consumed; not a batch entry
+        sel, pmask = participation.sample_nodes(
+            key, spec.num_nodes, spec.nodes_per_round,
+            schedule=spec.participation, node_sizes=node_tokens,
+            dropout_rate=spec.dropout_rate)
+        sel_batches = jax.tree.map(lambda x: x[sel], nodes)
+
+        def to_steps(x):  # split each node's pool into I_l local steps
+            per = x.shape[1] // spec.interval_length
+            return x[:, : per * spec.interval_length].reshape(
+                (x.shape[0], spec.interval_length, per) + x.shape[2:])
+
+        node_batches = jax.tree.map(to_steps, sel_batches)
+        params, opt_nodes, metrics = fed_train_round(
+            self.loss_fn, self.opt, state["params"], state["opt"],
+            node_batches, spec.lr, self.fed_cfg,
+            token_counts=node_tokens[sel], participation_mask=pmask)
+        return {"params": params, "opt": opt_nodes}, dict(metrics)
+
+    def evaluate(self, state) -> Dict[str, float]:
+        loss = self.loss_fn(state["params"], self.eval_batch)[0]
+        return _device_get_floats({"eval_loss": loss})
+
+    def state_flat(self, state) -> Dict[str, Any]:
+        return {"params": state["params"], "opt": state["opt"]}
+
+    def state_restore(self, flat: Dict[str, Any]):
+        from repro import checkpoint as ckpt
+        # model params are a FLAT dict with '/' in its keys — stripping
+        # the "params/" prefix recovers exactly the original keys
+        params = {k[len("params/"):]: jnp.asarray(v)
+                  for k, v in flat.items() if k.startswith("params/")}
+        opt_tpl = jax.eval_shape(
+            lambda _: jax.vmap(lambda __: self.opt.init(params))(
+                jnp.arange(self.spec.nodes_per_round)), 0)
+        opt_nodes = ckpt.unflatten_like(
+            opt_tpl, {k[len("opt/"):]: v for k, v in flat.items()
+                      if k.startswith("opt/")})
+        return {"params": params, "opt": opt_nodes}
+
+
+def make_substrate(spec: FedSpec) -> Substrate:
+    """Build the substrate a spec names, data included (the spec must
+    carry a data recipe — see ``FedSpec``)."""
+    if spec.substrate == "quantum":
+        return QuantumSubstrate(spec)
+    return ClassicalSubstrate(spec)

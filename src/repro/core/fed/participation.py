@@ -14,6 +14,10 @@ Schedules:
 * ``"weighted"`` — without replacement, inclusion probability
   proportional to the node's data volume N_n (size-aware participation;
   the varied client/participation regimes of FedQNN, arXiv:2403.10861).
+* ``"full"`` — every node, every round, in identity order (requires
+  ``nodes_per_round == num_nodes``): the pods-as-nodes production
+  mapping and synchronous local-SGD, where per-node optimizer state
+  must stay aligned with its node across rounds.
 * ``"dropout"`` — uniform selection, then each selected node
   independently drops out with probability ``dropout_rate``
   (straggler/failure masking). A dropped node's update is zeroed by the
@@ -31,7 +35,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-SCHEDULES = ("uniform", "weighted", "dropout")
+SCHEDULES = ("uniform", "weighted", "dropout", "full")
 
 
 def validate(schedule: str) -> str:
@@ -54,6 +58,14 @@ def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
     """
     validate(schedule)
     ones = jnp.ones((nodes_per_round,), jnp.float32)
+    if schedule == "full":
+        # every node, every round, identity order (pods-as-nodes mode /
+        # synchronous local-SGD) — opt-state slot n stays node n's
+        if nodes_per_round != num_nodes:
+            raise ValueError(
+                f"'full' participation needs nodes_per_round "
+                f"({nodes_per_round}) == num_nodes ({num_nodes})")
+        return jnp.arange(num_nodes), ones
     if schedule == "uniform":
         sel = jax.random.choice(key, num_nodes, (nodes_per_round,),
                                 replace=False)

@@ -316,40 +316,25 @@ def train(key: jax.Array, cfg: QuantumFedConfig, dataset: QuantumDataset,
           test: Tuple[jax.Array, jax.Array], n_iterations: int,
           params: Optional[qnn.Params] = None, eval_every: int = 1,
           verbose: bool = False) -> Tuple[qnn.Params, Dict[str, list]]:
-    """Full QuanFedPS training loop with train/test metric history."""
-    k_init, k_loop = jax.random.split(key)
-    if params is None:
-        params = qnn.init_params(k_init, cfg.widths)
+    """DEPRECATED parity shim over ``repro.core.fed.api`` — prefer
+    ``FederationSession`` (checkpointable, resumable, hookable).
 
-    train_in = dataset.phi_in.reshape(-1, dataset.phi_in.shape[-1])
-    train_out = dataset.phi_out.reshape(-1, dataset.phi_out.shape[-1])
-    vmask = dataset.valid_mask()
-    train_w = None if vmask is None else vmask.reshape(-1)
-    test_in, test_out = test
+    Drives a session with the legacy key schedule (init split + the
+    ``split(k_loop, n_iterations)`` round-key plan) and eval cadence, so
+    the returned (params, history) match the pre-session loop
+    bit-for-bit. Metric records cost ONE host sync each (a single
+    ``jax.device_get``), not one blocking ``float(...)`` per metric.
+    """
+    import warnings
 
-    history: Dict[str, list] = {
-        "iteration": [], "train_fidelity": [], "train_mse": [],
-        "test_fidelity": [], "test_mse": [],
-    }
+    from repro.core.fed import api
 
-    def record(t, p):
-        tr = evaluate(p, train_in, train_out, cfg.widths, impl=cfg.impl,
-                      weights=train_w)
-        te = evaluate(p, test_in, test_out, cfg.widths, impl=cfg.impl)
-        history["iteration"].append(t)
-        history["train_fidelity"].append(float(tr["fidelity"]))
-        history["train_mse"].append(float(tr["mse"]))
-        history["test_fidelity"].append(float(te["fidelity"]))
-        history["test_mse"].append(float(te["mse"]))
-        if verbose:
-            print(f"iter {t:4d}  train_fid {history['train_fidelity'][-1]:.4f}"
-                  f"  test_fid {history['test_fidelity'][-1]:.4f}"
-                  f"  train_mse {history['train_mse'][-1]:.4f}")
-
-    record(0, params)
-    keys = jax.random.split(k_loop, n_iterations)
-    for t in range(n_iterations):
-        params = server_round(params, dataset, keys[t], cfg)
-        if (t + 1) % eval_every == 0 or t == n_iterations - 1:
-            record(t + 1, params)
-    return params, history
+    warnings.warn("fed.train is a legacy shim; use repro.core.fed.api."
+                  "FederationSession", DeprecationWarning, stacklevel=2)
+    spec = api.FedSpec.from_quantum_config(cfg)
+    sub = api.QuantumSubstrate(spec, dataset=dataset, test=test)
+    sess = api.FederationSession.create(spec, key, substrate=sub,
+                                        params=params, rounds=n_iterations)
+    sess.run(n_iterations,
+             callbacks=[api.EvalEvery(eval_every, verbose=verbose)])
+    return sess.state, sess.history

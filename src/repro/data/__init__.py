@@ -1,2 +1,3 @@
-from repro.data.partition import partition_iid, partition_non_iid  # noqa: F401
+from repro.data.partition import (  # noqa: F401
+    node_token_counts, partition_iid, partition_non_iid)
 from repro.data.synthetic import BigramTask, token_batches  # noqa: F401

@@ -1,25 +1,44 @@
 """Federated data partitioning for classical streams — the paper's
 sort-based non-iid split applied to token data: sequences are sorted by
 a content key (here: leading-token value) and divided contiguously, so
-each node sees a skewed slice of the distribution."""
+each node sees a skewed slice of the distribution.
+
+Unequal node volumes: both partitions accept explicit per-node sequence
+counts ``node_seqs``. Nodes are padded to the largest count by cycling
+their OWN sequences (oversampling real data, never garbage), batches
+stay rectangular for the vmapped node pass, and the TRUE counts travel
+as the ``"n_seqs"`` entry so ``node_token_counts`` — and through it the
+Alg. 2 data-volume weights and "weighted" participation — see the real
+volumes N_n.
+"""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
-def partition_non_iid(batch: Dict[str, jax.Array], num_nodes: int
-                      ) -> Dict[str, jax.Array]:
-    """Adds a leading node axis by sort-and-shard (paper §IV-A)."""
-    key_src = batch.get("tokens", batch.get("labels"))
-    keys = np.asarray(key_src[:, 0])
-    order = np.argsort(keys, kind="stable")
-    b = keys.shape[0]
-    per = b // num_nodes
-    idx = jnp.asarray(order[: per * num_nodes].reshape(num_nodes, per))
+def _unequal_index(order: np.ndarray, node_seqs) -> np.ndarray:
+    """(num_nodes, max_size) gather index for an UNEQUAL contiguous
+    split of ``order``: node i owns the next ``node_seqs[i]`` sequences,
+    padded to the largest size by cycling its own sequences."""
+    sizes = [int(s) for s in node_seqs]
+    assert all(s > 0 for s in sizes), sizes
+    assert sum(sizes) <= order.shape[0], (sum(sizes), order.shape)
+    n_max = max(sizes)
+    starts = np.concatenate([[0], np.cumsum(sizes)])
+    rows = [order[starts[i]:starts[i] + s][np.arange(n_max) % s]
+            for i, s in enumerate(sizes)]
+    return np.stack(rows)
+
+
+def _shard(batch: Dict[str, jax.Array], idx: np.ndarray, b: int,
+           node_seqs=None) -> Dict[str, jax.Array]:
+    """Gather a (num_nodes, per) index into every batch entry."""
+    num_nodes, per = idx.shape
+    idx = jnp.asarray(idx)
 
     def shard(x):
         if hasattr(x, "shape") and x.shape and x.shape[0] == b:
@@ -31,21 +50,56 @@ def partition_non_iid(batch: Dict[str, jax.Array], num_nodes: int
                 g.reshape((3, num_nodes, per) + x.shape[2:]), 1, 0)
         return x
 
-    return {k: shard(v) for k, v in batch.items()}
+    out = {k: shard(v) for k, v in batch.items()}
+    if node_seqs is not None:
+        out["n_seqs"] = jnp.asarray([int(s) for s in node_seqs],
+                                    jnp.float32)
+    return out
 
 
-def partition_iid(batch: Dict[str, jax.Array], num_nodes: int, seed: int = 0
-                  ) -> Dict[str, jax.Array]:
+def partition_non_iid(batch: Dict[str, jax.Array], num_nodes: int,
+                      node_seqs=None) -> Dict[str, jax.Array]:
+    """Adds a leading node axis by sort-and-shard (paper §IV-A).
+    node_seqs: optional per-node TRUE sequence counts (unequal split)."""
+    key_src = batch.get("tokens", batch.get("labels"))
+    keys = np.asarray(key_src[:, 0])
+    order = np.argsort(keys, kind="stable")
+    b = keys.shape[0]
+    if node_seqs is not None:
+        return _shard(batch, _unequal_index(order, node_seqs), b,
+                      node_seqs)
+    per = b // num_nodes
+    return _shard(batch, order[: per * num_nodes].reshape(num_nodes, per),
+                  b)
+
+
+def partition_iid(batch: Dict[str, jax.Array], num_nodes: int, seed: int = 0,
+                  node_seqs=None) -> Dict[str, jax.Array]:
     key_src = batch.get("tokens", batch.get("labels"))
     b = key_src.shape[0]
     rng = np.random.default_rng(seed)
     order = rng.permutation(b)
+    if node_seqs is not None:
+        return _shard(batch, _unequal_index(order, node_seqs), b,
+                      node_seqs)
     per = b // num_nodes
-    idx = jnp.asarray(order[: per * num_nodes].reshape(num_nodes, per))
+    return _shard(batch, order[: per * num_nodes].reshape(num_nodes, per),
+                  b)
 
-    def shard(x):
-        if hasattr(x, "shape") and x.shape and x.shape[0] == b:
-            return x[idx.reshape(-1)].reshape((num_nodes, per) + x.shape[1:])
-        return x
 
-    return {k: shard(v) for k, v in batch.items()}
+def node_token_counts(nodes: Dict[str, jax.Array]) -> jax.Array:
+    """TRUE per-node token counts N_n from a partitioned batch.
+
+    Unequal partitions carry their true sequence counts as ``"n_seqs"``
+    (padded slots are oversampled repeats, which do NOT add volume);
+    equal partitions count each node's own label tokens — labels exist
+    for every arch, unlike "tokens", which embedding-input archs lack —
+    instead of assuming node 0's size speaks for everyone. Either way
+    the Alg. 2 data-volume weights and "weighted" participation see the
+    real volumes.
+    """
+    labels = nodes["labels"]  # (num_nodes, per_node, seq)
+    if "n_seqs" in nodes:
+        return nodes["n_seqs"].astype(jnp.float32) * labels.shape[-1]
+    return jnp.asarray([labels[i].size for i in range(labels.shape[0])],
+                       jnp.float32)

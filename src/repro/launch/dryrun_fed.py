@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.fed import FederatedConfig, fed_train_round
+from repro.core.fed import api, fed_train_round
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import batch_shardings, param_shardings
 from repro.models import Model
@@ -53,9 +53,14 @@ def run(arch: str, interval: int, shape_name: str = "train_4k",
     n_pods = mesh.shape["pod"]
     model = Model(cfg)
     opt = AdamW(state_dtype=cfg.opt_state_dtype)
-    fed_cfg = FederatedConfig(num_nodes=n_pods, nodes_per_round=n_pods,
-                              interval_length=interval,
-                              delta_dtype=delta_dtype)
+    # the front-door spec for the pods-as-nodes mapping; the lowered
+    # round consumes its legacy-config projection
+    spec = api.FedSpec.classical(arch=arch, num_nodes=n_pods,
+                                 nodes_per_round=n_pods,
+                                 interval_length=interval,
+                                 participation="full",
+                                 delta_dtype=delta_dtype)
+    fed_cfg = spec.to_classical_config()
 
     # Fed mode: params replicated ACROSS pods (each pod trains locally),
     # FSDP over 'data' only — hence the embed-rule override.
@@ -144,9 +149,11 @@ def run_quantum(interval: int, num_nodes: int = 8, nodes_per_round: int = 4,
     from repro.core.quantum import qnn
 
     mesh = make_production_mesh(multi_pod=True)
-    cfg = qnn_232.config(num_nodes=num_nodes,
-                         nodes_per_round=nodes_per_round,
-                         interval_length=interval, fanout="shard_map")
+    spec = api.FedSpec.from_quantum_config(
+        qnn_232.config(num_nodes=num_nodes,
+                       nodes_per_round=nodes_per_round,
+                       interval_length=interval, fanout="shard_map"))
+    cfg = spec.to_quantum_config()
     _, ds, _ = qdata.make_federated_dataset(
         jax.random.PRNGKey(0), qnn_232.WIDTHS[0], num_nodes=num_nodes,
         n_per_node=4, n_test=4)

@@ -1,40 +1,111 @@
-"""Federated training driver — QuantumFed's Alg. 1/2 on classical models.
+"""Federated training driver — QuantumFed's Alg. 1/2 on classical
+models, driven through the federation front-door
+(``repro.core.fed.api``): build/load a ``FedSpec``, open a
+``FederationSession``, run rounds with checkpoint/resume.
 
-Two modes:
+Two data modes:
   * sim (default): single-host simulation with N nodes, node subsampling
     (Alg. 2 step 3), non-iid sort-based partitioning — mirrors the
     paper's experiment setup on a classical LM.
   * pods: the production mapping — every node is one pod of the
-    multi-pod mesh, all nodes participate each round, one cross-pod
-    all-reduce per round (use under dryrun or on a real 2-pod slice).
+    multi-pod mesh (use ``--participation full`` so optimizer state
+    stays aligned with its node) — see launch/dryrun_fed.py.
 
     PYTHONPATH=src python -m repro.launch.fed_train --arch qwen1.5-4b \
-        --rounds 10 --interval 4 --nodes 8 --nodes-per-round 4
+        --rounds 10 --interval 4 --nodes 8 --nodes-per-round 4 \
+        --ckpt fed.npz --ckpt-every 5
+
+    # later, continue bit-exactly where the killed run stopped:
+    PYTHONPATH=src python -m repro.launch.fed_train --resume fed.npz \
+        --rounds 5
+
+    # or drive everything from a declarative spec file:
+    PYTHONPATH=src python -m repro.launch.fed_train --spec spec.json \
+        --rounds 10
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.core.fed import FederatedConfig, fed_train_round, participation
-from repro.data import partition_iid, partition_non_iid, token_batches
-from repro.models import Model
-from repro.optim import AdamW
+from repro.core.fed import api, participation
+
+
+class _RoundLog(api.Callback):
+    """Legacy driver output: per-round eval + train loss + wall time."""
+
+    def __init__(self):
+        self.t0 = time.time()
+
+    def on_run_begin(self, session):
+        if session.round == 0:
+            l0 = session.evaluate()["eval_loss"]
+            print(f"round  0  eval loss {l0:.4f}")
+
+    def on_round_end(self, session, metrics):
+        m = session.record_eval()
+        train = float(metrics.get("loss", float("nan")))
+        print(f"round {session.round:2d}  eval loss {m['eval_loss']:.4f}  "
+              f"train loss {train:.4f}  ({time.time()-self.t0:.0f}s)")
+
+
+def _extend_key_plan(sess, rounds: int) -> None:
+    """Resuming past the stored round-key plan: the sequential-split
+    stream is prefix-stable, so regrow the plan from the driver's seed
+    convention (PRNGKey(data_seed + 7)) — the 2-round-then-resume run
+    and the uninterrupted longer run then use identical keys. A plan
+    this driver did not produce is left alone (fold_in fallback)."""
+    import numpy as np
+    need = sess.round + rounds
+    plan = sess.round_keys
+    if plan is None or plan.shape[0] >= need:
+        return
+    grown = api.sequential_split_plan(
+        jax.random.PRNGKey(sess.spec.data_seed + 7), need)
+    if np.array_equal(np.asarray(grown[:plan.shape[0]]),
+                      np.asarray(plan)):
+        sess.round_keys = grown
+    else:
+        print(f"warning: stored round-key plan ({plan.shape[0]} keys) is "
+              f"not this driver's; rounds past it use the fold_in "
+              "schedule")
+
+
+def build_spec(args) -> api.FedSpec:
+    if args.spec:
+        with open(args.spec) as f:
+            return api.FedSpec.from_json(f.read())
+    if not args.arch:
+        raise SystemExit("need --arch (or --spec / --resume)")
+    sizes = (tuple(int(x) for x in args.node_sizes.split(","))
+             if args.node_sizes else None)
+    return api.FedSpec.classical(
+        arch=args.arch, num_nodes=args.nodes,
+        nodes_per_round=args.nodes_per_round,
+        interval_length=args.interval, lr=args.lr, outer_lr=args.outer_lr,
+        participation=args.participation, dropout_rate=args.dropout,
+        node_batch=args.node_batch, seq_len=args.seq, node_sizes=sizes,
+        data_iid=args.iid, data_seed=args.seed)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
+    ap.add_argument("--spec", help="path to a FedSpec JSON file "
+                    "(overrides the per-field flags)")
+    ap.add_argument("--resume", help="continue a checkpointed session "
+                    "bit-exactly")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--interval", type=int, default=2,
                     help="I_l: local steps per round")
     ap.add_argument("--nodes", type=int, default=8)
     ap.add_argument("--nodes-per-round", type=int, default=4)
     ap.add_argument("--node-batch", type=int, default=4)
+    ap.add_argument("--node-sizes", help="comma-separated per-node "
+                    "sequence counts (unequal data volumes, e.g. 2,4,8)")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outer-lr", type=float, default=1.0)
@@ -45,64 +116,49 @@ def main(argv=None):
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="straggler rate for --participation dropout")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", help="session checkpoint path")
+    ap.add_argument("--ckpt-every", type=int, default=1)
+    ap.add_argument("--dump-spec", help="write the resolved FedSpec "
+                    "JSON here and exit")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch).reduced()
-    model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    opt = AdamW(weight_decay=0.0)
-    fed_cfg = FederatedConfig(num_nodes=args.nodes_per_round,
-                              nodes_per_round=args.nodes_per_round,
-                              interval_length=args.interval,
-                              outer_lr=args.outer_lr,
-                              participation=args.participation,
-                              dropout_rate=args.dropout)
-    loss_fn = lambda p, b: model.loss_fn(p, b)
+    if args.resume:
+        sess = api.FederationSession.resume(args.resume)
+        spec = sess.spec
+        if spec.substrate != "classical":
+            raise SystemExit(
+                f"{args.resume} is a {spec.substrate!r} session — this "
+                "driver runs classical federations; resume it with "
+                "api.FederationSession.resume(...)")
+        _extend_key_plan(sess, args.rounds)
+        print(f"resumed {args.resume} at round {sess.round} "
+              f"(arch={spec.arch})")
+    else:
+        spec = build_spec(args)
+        if args.dump_spec:
+            with open(args.dump_spec, "w") as f:
+                f.write(spec.to_json(indent=1))
+            print(f"wrote {args.dump_spec}")
+            return None
+        sub = api.ClassicalSubstrate(spec)
+        # legacy RNG conventions, preserved exactly: params from
+        # PRNGKey(seed), round keys from the sequential split of
+        # PRNGKey(seed + 7)
+        params = sub.model.init(jax.random.PRNGKey(spec.data_seed))
+        plan = api.sequential_split_plan(
+            jax.random.PRNGKey(spec.data_seed + 7), args.rounds)
+        sess = api.FederationSession.create(
+            spec, jax.random.PRNGKey(spec.data_seed), substrate=sub,
+            params=params, round_keys=plan)
+        print(f"fed arch={sub.cfg.name} N={spec.num_nodes} "
+              f"N_p={spec.nodes_per_round} I_l={spec.interval_length} "
+              f"non-iid={not spec.data_iid}")
 
-    # pool of node datasets: one big stream partitioned non-iid
-    data = token_batches(cfg, args.nodes * args.node_batch * 2, args.seq,
-                         seed=args.seed)
-    eval_batch = next(token_batches(cfg, 8, args.seq, seed=args.seed + 99))
-
-    print(f"fed arch={cfg.name} N={args.nodes} N_p={args.nodes_per_round} "
-          f"I_l={args.interval} non-iid={not args.iid}")
-    l0 = float(loss_fn(params, eval_batch)[0])
-    print(f"round  0  eval loss {l0:.4f}")
-
-    key = jax.random.PRNGKey(args.seed + 7)
-    t0 = time.time()
-    opt_nodes = jax.vmap(lambda _: opt.init(params))(
-        jnp.arange(args.nodes_per_round))
-    for rnd in range(args.rounds):
-        key, k_sel = jax.random.split(key)
-        # fresh global pool each round, partitioned non-iid across N nodes
-        pool = next(data)
-        nodes = (partition_iid(pool, args.nodes, seed=args.seed + rnd)
-                 if args.iid else partition_non_iid(pool, args.nodes))
-        # data volumes: tokens per node (equal here, but the schedule API
-        # is volume-aware for unequal pools)
-        node_tokens = jnp.full((args.nodes,), nodes["tokens"][0].size,
-                               jnp.float32)
-        sel, pmask = participation.sample_nodes(
-            k_sel, args.nodes, args.nodes_per_round,
-            schedule=fed_cfg.participation, node_sizes=node_tokens,
-            dropout_rate=fed_cfg.dropout_rate)
-        sel_batches = jax.tree.map(lambda x: x[sel], nodes)
-        # split each node's data into I_l local-step minibatches
-        def to_steps(x):
-            per = x.shape[1] // args.interval
-            return x[:, : per * args.interval].reshape(
-                (x.shape[0], args.interval, per) + x.shape[2:])
-        node_batches = jax.tree.map(to_steps, sel_batches)
-        params, opt_nodes, metrics = fed_train_round(
-            loss_fn, opt, params, opt_nodes, node_batches, args.lr,
-            fed_cfg, token_counts=node_tokens[sel],
-            participation_mask=pmask)
-        le = float(loss_fn(params, eval_batch)[0])
-        print(f"round {rnd+1:2d}  eval loss {le:.4f}  "
-              f"train loss {float(metrics['loss']):.4f}  "
-              f"({time.time()-t0:.0f}s)")
-    return params
+    callbacks = [_RoundLog()]
+    if args.ckpt:
+        callbacks.append(api.Checkpointer(args.ckpt, every=args.ckpt_every))
+    sess.run(args.rounds, callbacks=callbacks)
+    return sess.state["params"]
 
 
 if __name__ == "__main__":

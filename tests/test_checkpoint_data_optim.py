@@ -28,6 +28,46 @@ def test_checkpoint_roundtrip(tmp_path):
                                       np.asarray(params[k], np.float32))
 
 
+def test_checkpoint_complex_qnn_params_roundtrip(tmp_path):
+    """List-of-complex-unitaries (the QNN param pytree) through
+    _flatten/npz and back via ``unflatten_like`` — bit-exact, dtypes
+    preserved, nesting (lists inside dicts) reconstructed."""
+    from repro.core.quantum import qnn
+
+    params = qnn.init_params(jax.random.PRNGKey(0), (2, 3, 2))
+    assert all(jnp.issubdtype(p.dtype, jnp.complexfloating)
+               for p in params)
+    tree = {"state": {"params": list(params)},
+            "rng": {"base": np.asarray(jax.random.PRNGKey(7))}}
+    p = str(tmp_path / "qnn.npz")
+    ckpt.save(p, tree, step=3)
+    flat, meta = ckpt.restore(p)
+    assert meta["step"] == 3
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    back = ckpt.unflatten_like(template, flat)
+    assert isinstance(back["state"]["params"], list)
+    for orig, rest in zip(params, back["state"]["params"]):
+        assert rest.dtype == orig.dtype
+        np.testing.assert_array_equal(np.asarray(rest), np.asarray(orig))
+    np.testing.assert_array_equal(np.asarray(back["rng"]["base"]),
+                                  np.asarray(tree["rng"]["base"]))
+
+
+def test_unflatten_like_namedtuple_and_missing_key():
+    from repro.optim.adamw import AdamWState
+
+    state = AdamWState(step=jnp.int32(4),
+                       m={"w": jnp.ones((2,))}, v={"w": jnp.zeros((2,))})
+    flat = {"s/0": np.int32(4), "s/1/w": np.ones((2,), np.float32),
+            "s/2/w": np.zeros((2,), np.float32)}
+    back = ckpt.unflatten_like({"s": state}, flat)["s"]
+    assert isinstance(back, AdamWState)
+    assert int(back.step) == 4
+    with pytest.raises(KeyError, match="missing"):
+        ckpt.unflatten_like({"s": state}, {"s/0": np.int32(4)})
+
+
 def test_bigram_task_learnable_structure():
     task = BigramTask(64, seed=0, branching=2)
     rng = np.random.default_rng(1)
@@ -60,6 +100,44 @@ def test_partition_non_iid_sorted():
     assert nodes["tokens"].shape == (4, 4, 8)
     lead = np.asarray(nodes["tokens"][..., 0]).reshape(-1)
     assert np.all(np.diff(lead) >= 0)
+
+
+def test_node_token_counts_from_partition():
+    """True per-node N_n comes from each node's own labels — works for
+    embedding-input archs (no "tokens" entry, where the old inline
+    ``nodes["tokens"][0].size`` crashed) and sums to the partition."""
+    from repro.data import node_token_counts
+
+    for arch in ("qwen1.5-4b", "musicgen-large"):
+        cfg = get_config(arch).reduced()
+        b = next(token_batches(cfg, 12, 8, seed=0))
+        nodes = partition_non_iid(b, 4)
+        counts = np.asarray(node_token_counts(nodes))
+        assert counts.shape == (4,)
+        assert counts.sum() == nodes["labels"].size
+        np.testing.assert_array_equal(
+            counts, [nodes["labels"][i].size for i in range(4)])
+
+
+def test_unequal_partition_true_counts_and_oversampling():
+    """Explicit node_seqs give an UNEQUAL split: true counts travel as
+    "n_seqs" (so weighted rounds are genuinely non-uniform) and padded
+    slots cycle the node's OWN sequences, never other nodes' data."""
+    from repro.data import node_token_counts
+
+    cfg = get_config("qwen1.5-4b").reduced()
+    b = next(token_batches(cfg, 14, 8, seed=0))
+    nodes = partition_non_iid(b, 3, node_seqs=(2, 4, 8))
+    assert nodes["labels"].shape == (3, 8, 8)  # padded to max size
+    counts = np.asarray(node_token_counts(nodes))
+    np.testing.assert_array_equal(counts, [2 * 8, 4 * 8, 8 * 8])
+    lab = np.asarray(nodes["labels"])
+    # node 0 holds 2 real sequences cycled 4x; node 1 holds 4 cycled 2x
+    np.testing.assert_array_equal(lab[0, 2:4], lab[0, 0:2])
+    np.testing.assert_array_equal(lab[1, 4:8], lab[1, 0:4])
+    # equal-split behavior is unchanged (no "n_seqs" entry)
+    eq = partition_non_iid(b, 3)
+    assert "n_seqs" not in eq and eq["labels"].shape == (3, 4, 8)
 
 
 def test_adamw_converges_quadratic():

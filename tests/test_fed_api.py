@@ -1,0 +1,345 @@
+"""Federation front-door gates (``repro.core.fed.api``).
+
+* FedSpec: fail-loud registry validation, JSON round-trip, lossless
+  legacy-config converters.
+* Parity: ``FederationSession.run`` reproduces the LEGACY loops —
+  ``fed.train`` (quantum) and the pre-session ``launch/fed_train.py``
+  round loop (classical) — to <= 1e-10 (bit-exact in practice).
+* Kill-and-resume: a checkpointed-and-resumed session matches the
+  uninterrupted run bit-exactly on BOTH substrates.
+* Hooks: early stop, periodic checkpoints, metric streaming.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fed import FederatedConfig, api, fed_train_round, participation
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+from repro.core.quantum import qnn
+
+WIDTHS = (2, 2)
+
+
+def small_quantum_spec(**kw):
+    base = dict(widths=WIDTHS, num_nodes=4, nodes_per_round=2,
+                interval_length=2, eps=0.1, n_per_node=3, n_test=4,
+                data_seed=5)
+    base.update(kw)
+    return api.FedSpec.quantum(**base)
+
+
+# ---------------------------------------------------------------- FedSpec
+
+def test_spec_validation_fails_loud():
+    with pytest.raises(ValueError, match="aggregation"):
+        small_quantum_spec(aggregation="majority-vote")
+    with pytest.raises(ValueError, match="participation"):
+        small_quantum_spec(participation="round-robin")
+    with pytest.raises(ValueError, match="widths"):
+        api.FedSpec(substrate="quantum", widths=None)
+    with pytest.raises(ValueError, match="quantum-only"):
+        api.FedSpec.classical(arch="qwen1.5-4b", aggregation="product")
+    with pytest.raises(ValueError, match="substrate"):
+        api.FedSpec(substrate="analog")
+    with pytest.raises(ValueError, match="nodes_per_round"):
+        small_quantum_spec(nodes_per_round=9)
+    with pytest.raises(ValueError, match="dropout_rate"):
+        small_quantum_spec(dropout_rate=1.5)
+    with pytest.raises(ValueError, match="engine"):
+        small_quantum_spec(engine="tensor-network")
+    with pytest.raises(ValueError, match="full"):
+        small_quantum_spec(participation="full")  # N_p != N
+    with pytest.raises(ValueError, match="both dataset"):
+        _, ds, _ = qdata.make_federated_dataset(
+            jax.random.PRNGKey(0), WIDTHS[0], num_nodes=4, n_per_node=3,
+            n_test=4)
+        api.QuantumSubstrate(small_quantum_spec(), dataset=ds)
+
+
+def test_spec_json_roundtrip():
+    for spec in (small_quantum_spec(node_sizes=(2, 3, 4, 5),
+                                    upload_noise=0.5,
+                                    participation="dropout",
+                                    dropout_rate=0.25),
+                 api.FedSpec.classical(arch="qwen1.5-4b", n_layers=1,
+                                       num_nodes=3, nodes_per_round=2,
+                                       aggregation="served",
+                                       seq_len=16, data_seed=3)):
+        again = api.FedSpec.from_json(spec.to_json())
+        assert again == spec
+        assert isinstance(again.widths, (tuple, type(None)))
+    with pytest.raises(ValueError, match="unknown FedSpec fields"):
+        api.FedSpec.from_json({"substrate": "quantum",
+                               "widths": [2, 2], "n_qubits": 7})
+    with pytest.raises(ValueError, match="version"):
+        d = small_quantum_spec().to_json_dict()
+        d["version"] = api.SPEC_VERSION + 1
+        api.FedSpec.from_json(d)
+
+
+def test_spec_legacy_converters_lossless():
+    qcfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=7,
+                                nodes_per_round=3, interval_length=4,
+                                eta=0.5, eps=0.05, minibatch=2,
+                                aggregation="served", upload_noise=0.1,
+                                engine="dense", impl="pallas",
+                                participation="weighted", fanout="vmap")
+    assert api.FedSpec.from_quantum_config(qcfg).to_quantum_config() == qcfg
+
+    ccfg = FederatedConfig(num_nodes=5, nodes_per_round=3,
+                           interval_length=2, aggregation="served",
+                           participation="dropout", dropout_rate=0.3,
+                           outer_lr=0.7, delta_dtype="bfloat16")
+    spec = api.FedSpec.from_classical_config(ccfg, arch="qwen1.5-4b")
+    assert spec.to_classical_config() == ccfg
+    # spec -> legacy -> spec keeps the federation fields
+    spec2 = api.FedSpec.from_classical_config(spec.to_classical_config(),
+                                              arch=spec.arch)
+    assert dataclasses.asdict(spec2) == dataclasses.asdict(spec)
+
+
+def test_full_participation_schedule():
+    sel, mask = participation.sample_nodes(jax.random.PRNGKey(0), 4, 4,
+                                           schedule="full")
+    np.testing.assert_array_equal(np.asarray(sel), np.arange(4))
+    np.testing.assert_array_equal(np.asarray(mask), np.ones(4))
+    with pytest.raises(ValueError, match="full"):
+        participation.sample_nodes(jax.random.PRNGKey(0), 4, 2,
+                                   schedule="full")
+
+
+# ---------------------------------------------------- quantum stack parity
+
+def _legacy_quantum_train(key, cfg, ds, test, n, eval_every):
+    """Frozen copy of the pre-session ``fed.train`` loop."""
+    k_init, k_loop = jax.random.split(key)
+    params = qnn.init_params(k_init, cfg.widths)
+    ti = ds.phi_in.reshape(-1, ds.phi_in.shape[-1])
+    to = ds.phi_out.reshape(-1, ds.phi_out.shape[-1])
+    hist = {"iteration": [], "train_fidelity": [], "train_mse": [],
+            "test_fidelity": [], "test_mse": []}
+
+    def record(t, p):
+        tr = fed.evaluate(p, ti, to, cfg.widths, impl=cfg.impl)
+        te = fed.evaluate(p, test[0], test[1], cfg.widths, impl=cfg.impl)
+        hist["iteration"].append(t)
+        hist["train_fidelity"].append(float(tr["fidelity"]))
+        hist["train_mse"].append(float(tr["mse"]))
+        hist["test_fidelity"].append(float(te["fidelity"]))
+        hist["test_mse"].append(float(te["mse"]))
+
+    record(0, params)
+    keys = jax.random.split(k_loop, n)
+    for t in range(n):
+        params = fed.server_round(params, ds, keys[t], cfg)
+        if (t + 1) % eval_every == 0 or t == n - 1:
+            record(t + 1, params)
+    return params, hist
+
+
+def test_session_matches_legacy_quantum_train():
+    spec = small_quantum_spec()
+    cfg = spec.to_quantum_config()
+    _, ds, test = qdata.make_federated_dataset(
+        jax.random.PRNGKey(spec.data_seed), WIDTHS[0],
+        num_nodes=spec.num_nodes, n_per_node=spec.n_per_node,
+        n_test=spec.n_test)
+    key = jax.random.PRNGKey(7)
+    p_old, h_old = _legacy_quantum_train(key, cfg, ds, test, 4,
+                                         eval_every=2)
+    p_new, h_new = fed.train(key, cfg, ds, test, 4, eval_every=2)
+    assert h_new["iteration"] == h_old["iteration"]
+    for k in h_old:
+        np.testing.assert_allclose(h_new[k], h_old[k], atol=1e-10)
+    for a, b in zip(p_old, p_new):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantum_kill_and_resume_bit_exact(tmp_path):
+    spec = small_quantum_spec()
+    key = jax.random.PRNGKey(3)
+    straight = api.FederationSession.create(spec, key)
+    straight.run(4, callbacks=[api.EvalEvery(2)])
+
+    killed = api.FederationSession.create(spec, key)
+    killed.run(2, callbacks=[api.EvalEvery(2)])
+    path = str(tmp_path / "fed.npz")
+    killed.save(path)
+    del killed
+
+    resumed = api.FederationSession.resume(path)
+    assert resumed.round == 2
+    assert resumed.spec == spec  # spec travelled through the checkpoint
+    resumed.run(2, callbacks=[api.EvalEvery(2)])
+    for a, b in zip(straight.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert resumed.history == straight.history
+
+
+# -------------------------------------------------- classical stack parity
+
+ARCH, NODES, NPR, INTERVAL, NB, SEQ, SEED = \
+    "qwen1.5-4b", 3, 2, 2, 2, 16, 0
+
+
+def classical_spec():
+    return api.FedSpec.classical(
+        arch=ARCH, n_layers=1, num_nodes=NODES, nodes_per_round=NPR,
+        interval_length=INTERVAL, node_batch=NB, seq_len=SEQ,
+        data_seed=SEED)
+
+
+def _legacy_classical_loop(rounds):
+    """Frozen copy of the pre-session ``launch/fed_train.py`` sim loop
+    (including its constant node_tokens — equal partitions, so the true
+    per-node counts coincide)."""
+    from repro.configs import get_config
+    from repro.data import partition_non_iid, token_batches
+    from repro.models import Model
+    from repro.optim import AdamW
+
+    cfg = get_config(ARCH).reduced(n_layers=1)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(SEED))
+    opt = AdamW(weight_decay=0.0)
+    fed_cfg = FederatedConfig(num_nodes=NPR, nodes_per_round=NPR,
+                              interval_length=INTERVAL)
+    loss_fn = lambda p, b: model.loss_fn(p, b)
+    data = token_batches(cfg, NODES * NB * 2, SEQ, seed=SEED)
+    eval_batch = next(token_batches(cfg, 8, SEQ, seed=SEED + 99))
+    losses = [float(loss_fn(params, eval_batch)[0])]
+    key = jax.random.PRNGKey(SEED + 7)
+    opt_nodes = jax.vmap(lambda _: opt.init(params))(jnp.arange(NPR))
+    for _ in range(rounds):
+        key, k_sel = jax.random.split(key)
+        pool = next(data)
+        nodes = partition_non_iid(pool, NODES)
+        node_tokens = jnp.full((NODES,), nodes["tokens"][0].size,
+                               jnp.float32)
+        sel, pmask = participation.sample_nodes(
+            k_sel, NODES, NPR, schedule="uniform",
+            node_sizes=node_tokens, dropout_rate=0.0)
+        sel_batches = jax.tree.map(lambda x: x[sel], nodes)
+
+        def to_steps(x):
+            per = x.shape[1] // INTERVAL
+            return x[:, : per * INTERVAL].reshape(
+                (x.shape[0], INTERVAL, per) + x.shape[2:])
+
+        node_batches = jax.tree.map(to_steps, sel_batches)
+        params, opt_nodes, _ = fed_train_round(
+            loss_fn, opt, params, opt_nodes, node_batches, 3e-3,
+            fed_cfg, token_counts=node_tokens[sel],
+            participation_mask=pmask)
+        losses.append(float(loss_fn(params, eval_batch)[0]))
+    return params, losses
+
+
+def _classical_session(rounds):
+    spec = classical_spec()
+    sub = api.ClassicalSubstrate(spec)
+    params = sub.model.init(jax.random.PRNGKey(SEED))
+    plan = api.sequential_split_plan(jax.random.PRNGKey(SEED + 7), rounds)
+    return api.FederationSession.create(spec, jax.random.PRNGKey(SEED),
+                                        substrate=sub, params=params,
+                                        round_keys=plan)
+
+
+def test_session_matches_legacy_classical_loop():
+    rounds = 2
+    p_old, l_old = _legacy_classical_loop(rounds)
+    sess = _classical_session(rounds)
+    sess.run(rounds, callbacks=[api.EvalEvery(1)])
+    np.testing.assert_allclose(sess.history["eval_loss"], l_old,
+                               atol=1e-10)
+    for k in p_old:
+        np.testing.assert_array_equal(np.asarray(p_old[k]),
+                                      np.asarray(sess.state["params"][k]))
+
+
+def test_classical_unequal_nodes_weighted_round():
+    """A spec with unequal node_sizes drives a weighted round whose
+    sampling sees the TRUE (non-uniform) volumes end-to-end."""
+    spec = api.FedSpec.classical(
+        arch=ARCH, n_layers=1, num_nodes=3, nodes_per_round=2,
+        interval_length=1, node_batch=NB, seq_len=SEQ,
+        node_sizes=(1, 2, 5), participation="weighted", data_seed=SEED)
+    sub = api.ClassicalSubstrate(spec)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(2),
+                                        substrate=sub)
+    sess.run(1, callbacks=[api.EvalEvery(1)])
+    assert np.isfinite(sess.history["eval_loss"]).all()
+    with pytest.raises(ValueError, match="node_sizes"):
+        api.FedSpec.classical(arch=ARCH, num_nodes=3, nodes_per_round=2,
+                              node_sizes=(1, 2))
+
+
+def test_driver_resume_extends_key_plan(tmp_path):
+    """Resuming past the stored plan regrows the sequential-split
+    stream (prefix-stable), so 2-rounds-then-resume-1 equals an
+    uninterrupted 3-round plan — no silent schedule switch."""
+    from repro.launch.fed_train import _extend_key_plan
+
+    spec = classical_spec()
+    sub = api.ClassicalSubstrate(spec)
+    params = sub.model.init(jax.random.PRNGKey(SEED))
+    plan2 = api.sequential_split_plan(jax.random.PRNGKey(SEED + 7), 2)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(SEED),
+                                        substrate=sub, params=params,
+                                        round_keys=plan2)
+    sess.round = 2  # as if two rounds already ran
+    _extend_key_plan(sess, rounds=1)
+    plan3 = api.sequential_split_plan(jax.random.PRNGKey(SEED + 7), 3)
+    np.testing.assert_array_equal(np.asarray(sess.round_keys),
+                                  np.asarray(plan3))
+
+
+def test_classical_kill_and_resume_bit_exact(tmp_path):
+    rounds = 2
+    straight = _classical_session(rounds)
+    straight.run(rounds, callbacks=[api.EvalEvery(1)])
+
+    killed = _classical_session(rounds)
+    killed.run(1, callbacks=[api.EvalEvery(1)])
+    path = str(tmp_path / "fed.npz")
+    killed.save(path)
+    del killed
+
+    resumed = api.FederationSession.resume(path)  # rebuilt from the spec
+    resumed.run(1, callbacks=[api.EvalEvery(1)])
+    assert resumed.history == straight.history
+    for k in straight.state["params"]:
+        np.testing.assert_array_equal(
+            np.asarray(straight.state["params"][k]),
+            np.asarray(resumed.state["params"][k]))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        straight.state["opt"], resumed.state["opt"])
+
+
+# ------------------------------------------------------------------ hooks
+
+def test_hooks_early_stop_checkpointer_metric_stream(tmp_path):
+    spec = small_quantum_spec()
+    path = str(tmp_path / "hook.npz")
+    streamed = []
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(1))
+    sess.run(6, callbacks=[
+        api.EvalEvery(1),
+        api.EarlyStop("test_fidelity", target=-1.0),  # fires on 1st eval
+        api.Checkpointer(path, every=1),
+        api.MetricStream(lambda r, m: streamed.append(r)),
+    ])
+    # early stop after the first round's eval, not all 6
+    assert sess.round == 1
+    assert sess.history["iteration"] == [0, 1]
+    assert streamed == []  # quantum rounds emit no per-round metrics
+    resumed = api.FederationSession.resume(path)
+    assert resumed.round == 1  # checkpointer wrote the final state
+    for a, b in zip(sess.state, resumed.state):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -87,12 +87,14 @@ def test_uniform_schedule_bit_compatible_with_plain_choice():
 def test_sampling_without_replacement_all_schedules():
     sizes = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
     for schedule in participation.SCHEDULES:
+        # "full" requires N_p == N (every node, identity order)
+        n_p = 6 if schedule == "full" else 4
         for seed in range(5):
             sel, mask = participation.sample_nodes(
-                jax.random.PRNGKey(seed), 6, 4, schedule=schedule,
+                jax.random.PRNGKey(seed), 6, n_p, schedule=schedule,
                 node_sizes=sizes, dropout_rate=0.5)
-            assert len(set(np.asarray(sel).tolist())) == 4  # no repeats
-            assert mask.shape == (4,)
+            assert len(set(np.asarray(sel).tolist())) == n_p  # no repeats
+            assert mask.shape == (n_p,)
 
 
 def test_weighted_schedule_prefers_large_nodes():
