@@ -1,0 +1,93 @@
+"""Spec-driven federation sweep — run every ``FedSpec`` JSON in a
+directory across round schedulers and record round-latency + quality
+trajectories into ``BENCH_fed.json``.
+
+    PYTHONPATH=src python -m benchmarks.run --spec benchmarks/specs \
+        --rounds 3 --schedules sync,async,overlapped
+
+Each (spec, schedule) cell drives a fresh ``FederationSession`` for
+``--rounds`` rounds with per-round wall-clock timing (state blocked to
+ready, so async dispatch doesn't flatter a schedule) and an eval every
+round; the JSON carries the full history so trajectory plots come
+straight from the file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import time
+
+import jax
+
+from repro.core.fed import api
+
+
+class _RoundTimer(api.Callback):
+    """Wall-clock per round, state forced to ready before the stamp."""
+
+    def __init__(self):
+        self.round_s = []
+        self._t = None
+
+    def on_run_begin(self, session):
+        jax.block_until_ready(jax.tree.leaves(session.state))
+        self._t = time.perf_counter()
+
+    def on_round_end(self, session, metrics):
+        jax.block_until_ready(jax.tree.leaves(session.state))
+        now = time.perf_counter()
+        self.round_s.append(now - self._t)
+        self._t = now
+
+
+def run_cell(spec: api.FedSpec, schedule: str, rounds: int) -> dict:
+    """One (spec, schedule) sweep cell -> entry dict."""
+    spec = dataclasses.replace(spec, schedule=schedule)
+    # untimed warmup on a throwaway session: the jit cache is process-
+    # wide, so the timed rounds below measure steady-state round latency
+    # rather than trace+compile (which would also skew the cross-
+    # schedule comparison — sync compiles one fused round, async four
+    # phase jits)
+    warm = api.FederationSession.create(
+        spec, jax.random.PRNGKey(spec.data_seed))
+    warm.run(min(2, rounds), callbacks=[api.EvalEvery(1)])
+    sess = api.FederationSession.create(
+        spec, jax.random.PRNGKey(spec.data_seed))
+    timer = _RoundTimer()
+    sess.run(rounds, callbacks=[timer, api.EvalEvery(1)])
+    return {
+        "schedule": schedule,
+        "substrate": spec.substrate,
+        "rounds": rounds,
+        "round_s": timer.round_s,
+        "history": sess.history,
+    }
+
+
+def main(rows, spec_dir: str, rounds: int = 3, schedules=None,
+         out: str = "BENCH_fed.json") -> None:
+    paths = sorted(glob.glob(os.path.join(spec_dir, "*.json")))
+    if not paths:
+        raise SystemExit(f"no FedSpec *.json files under {spec_dir!r}")
+    entries = []
+    for path in paths:
+        with open(path) as f:
+            spec = api.FedSpec.from_json(f.read())
+        name = os.path.splitext(os.path.basename(path))[0]
+        for schedule in (schedules or [spec.schedule]):
+            print(f"-- {name} / {schedule}")
+            entry = dict(run_cell(spec, schedule, rounds), spec=name)
+            entries.append(entry)
+            mean_us = 1e6 * sum(entry["round_s"]) / max(
+                len(entry["round_s"]), 1)
+            quality = {k: v[-1] for k, v in entry["history"].items()
+                       if k != "iteration" and v}
+            derived = " ".join(f"{k}={v:.4f}" for k, v in
+                               sorted(quality.items()))
+            rows.append((f"fed/{name}/{schedule}", mean_us, derived))
+    payload = {"rounds": rounds, "entries": entries}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {out} ({len(entries)} sweep cells)")

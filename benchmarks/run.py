@@ -2,6 +2,10 @@
 perf. Prints a ``name,us_per_call,derived`` CSV summary at the end.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig2,fig3,...]
+
+    # spec-driven federation sweep across round schedulers:
+    PYTHONPATH=src python -m benchmarks.run --spec benchmarks/specs \
+        --rounds 3 --schedules sync,async,overlapped
 """
 from __future__ import annotations
 
@@ -37,8 +41,31 @@ def main() -> None:
                          "qnn_232-driven suites (registry-validated)")
     ap.add_argument("--dropout-rate", type=float, default=None,
                     help="straggler rate for --participation dropout")
+    ap.add_argument("--spec", default=None,
+                    help="directory of FedSpec *.json files: run the "
+                    "spec-driven federation sweep instead of the suites")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="--spec: rounds per sweep cell")
+    ap.add_argument("--schedules", default="",
+                    help="--spec: comma-separated scheduler overrides "
+                    "(default: each spec's own schedule)")
+    ap.add_argument("--out", default="BENCH_fed.json",
+                    help="--spec: output JSON path")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(SUITES)
+
+    if args.spec:
+        from benchmarks import bench_fed
+        rows = []
+        t0 = time.time()
+        bench_fed.main(rows, args.spec, rounds=args.rounds,
+                       schedules=[s for s in args.schedules.split(",")
+                                  if s] or None, out=args.out)
+        print(f"\n==== CSV summary ({time.time()-t0:.0f}s total) ====")
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     # strategy-driven config: overrides flow through the validated
     # qnn_232.config helper, never as raw strings into the suites

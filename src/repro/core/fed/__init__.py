@@ -7,7 +7,9 @@ One place for the pieces every QuanFedPS round is made of:
 * ``participation`` — node-selection schedules (``uniform`` /
   ``weighted`` / ``dropout``) and Alg. 2 data-volume weights.
 * ``channel`` — ChannelModel protocol for what happens to uploads in
-  flight (identity, Hermitian noise; future quantization).
+  flight (identity, Hermitian noise, stochastic quantization).
+* ``server_opt`` — server-side outer optimizer registry (momentum /
+  Nesterov on the aggregated delta; state checkpointed with the model).
 * ``fed_step`` / ``local`` — the classical substrate: interval-length
   local update + weighted delta aggregation for arbitrary JAX pytree
   models, with the multi-pod 'pod' mesh axis as the federation axis.

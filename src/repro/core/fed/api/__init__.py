@@ -14,6 +14,11 @@ stacks.
     sess = api.FederationSession.resume("fed.npz")
     sess.run(50)   # continues bit-exactly
 """
+from repro.core.fed.api.phases import (  # noqa: F401
+    Cohort, PhasedSubstrate, compose_round, upload_slice, upload_stack)
+from repro.core.fed.api.scheduler import (  # noqa: F401
+    SCHEDULERS, AsyncScheduler, OverlappedScheduler, Scheduler,
+    SyncScheduler, make_scheduler, validate_schedule)
 from repro.core.fed.api.session import (  # noqa: F401
     Callback, Checkpointer, EarlyStop, EvalEvery, FederationSession,
     MetricStream, sequential_split_plan)

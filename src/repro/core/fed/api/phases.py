@@ -1,0 +1,122 @@
+"""The phased round protocol — what ``Substrate.run_round`` is made of.
+
+A federation round is four phases, and the server-side composition of a
+round is DATA the session's scheduler owns instead of physics the
+substrate hides:
+
+    select(key, round)                 -> Cohort
+    local_update(state, cohort, key)   -> (state', uploads, metrics)
+    transmit(uploads, key)             -> received
+    aggregate(state, received, weights) -> state
+
+* ``select`` — participation sampling + the round's Alg. 2 aggregation
+  weights (and, substrate-permitting, the cohort's round data).
+* ``local_update`` — the QuanFedNode fan-out / I_l local optimizer
+  steps. It returns the post-local state alongside the uploads because
+  node-side state (the classical per-node inner-optimizer slots) commits
+  at DISPATCH time — it belongs to the node, not to the server's
+  aggregation; the quantum substrate returns its state unchanged.
+* ``transmit`` — the channel model (Hermitian noise, quantization) plus
+  the strategy's wire cast: everything that happens to an upload
+  between node and server.
+* ``aggregate`` — the strategy combine into the global model (plus
+  server-side outer momentum when the spec asks for it). ``received``
+  may stack ANY number of uploads — the full cohort in a sync round, K
+  buffered (possibly stale) uploads in an async commit.
+
+``split_round_key`` fixes each substrate's RNG contract: the quantum
+round splits its key in three (selection / node / channel — exactly the
+pre-phase monolith's splits), the classical round feeds the whole key
+to selection (its only consumer) and derives fresh subkeys for the
+channel, so ``run_round`` composed from phases is bit-compatible with
+the PR 3 sessions.
+
+Schedulers hold uploads BETWEEN phases (async buffers, overlapped
+pending rounds), so uploads must survive a checkpoint:
+``upload_restore`` is the substrate-specific inverse of flattening one
+upload through ``repro.checkpoint`` (``upload_slice`` / ``upload_stack``
+are generic pytree helpers).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Cohort(NamedTuple):
+    """One round's selected nodes: indices, participation mask, paired
+    aggregation weights (all (N_p,)), the round/dispatch index the
+    cohort was drawn for, and — for substrates whose round data is
+    selected per round (classical pools) — the cohort's local batches."""
+    sel: jax.Array
+    mask: jax.Array
+    weights: jax.Array
+    round: int
+    data: Any = None
+
+
+class PhasedSubstrate(Protocol):
+    """A substrate that exposes the four round phases (both of ours do).
+
+    ``run_round`` remains the canonical phase composition — substrates
+    may fuse it (the quantum round stays one jit) but the sequencing
+    must match ``compose_round`` so sync scheduling is bit-compatible.
+    """
+
+    def split_round_key(self, key: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        ...
+
+    def select(self, key: jax.Array, round: int) -> Cohort:
+        ...
+
+    def local_update(self, state: Any, cohort: Cohort, key: jax.Array
+                     ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+        ...
+
+    def transmit(self, uploads: Any, key: jax.Array) -> Any:
+        ...
+
+    def aggregate(self, state: Any, received: Any,
+                  weights: jax.Array) -> Any:
+        ...
+
+    def upload_restore(self, flat: Dict[str, Any]) -> Any:
+        ...
+
+
+def dispatch_round(substrate: PhasedSubstrate, state: Any, key: jax.Array,
+                   round: int
+                   ) -> Tuple[Any, Cohort, Any, Dict[str, jax.Array]]:
+    """The select -> local -> transmit PREFIX of a round: everything up
+    to (but not including) the server commit. The single sequencing +
+    key-split site shared by the canonical composition and by every
+    scheduler that defers aggregation (async buffers, overlapped
+    pipelining). Returns ``(post-local state, cohort, received,
+    metrics)``."""
+    k_sel, k_loc, k_tx = substrate.split_round_key(key)
+    cohort = substrate.select(k_sel, round)
+    state, uploads, metrics = substrate.local_update(state, cohort, k_loc)
+    received = substrate.transmit(uploads, k_tx)
+    return state, cohort, received, metrics
+
+
+def compose_round(substrate: PhasedSubstrate, state: Any, key: jax.Array,
+                  round: int) -> Tuple[Any, Dict[str, jax.Array]]:
+    """The canonical phase composition — what ``run_round`` means."""
+    state, cohort, received, metrics = dispatch_round(substrate, state,
+                                                      key, round)
+    return substrate.aggregate(state, received, cohort.weights), metrics
+
+
+def upload_slice(uploads: Any, i: int) -> Any:
+    """Node ``i``'s upload out of a stacked cohort upload pytree."""
+    return jax.tree.map(lambda x: x[i], uploads)
+
+
+def upload_stack(node_uploads) -> Any:
+    """Stack per-node uploads back into a cohort-style pytree (the
+    inverse of ``upload_slice`` over a list of entries)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *node_uploads)

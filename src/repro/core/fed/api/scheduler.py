@@ -1,0 +1,299 @@
+"""Pluggable round schedulers — HOW a session sequences the phases.
+
+``FederationSession.step`` delegates to a ``Scheduler`` picked by
+``FedSpec.schedule``:
+
+* ``"sync"`` — Alg. 2 lock-step: one ``run_round`` (the substrate's
+  fused canonical phase composition) per step. Bit-compatible with the
+  PR 3 sessions — same ops, same keys, same single compiled round.
+* ``"async"`` — staleness-weighted BUFFERED aggregation (FedBuff-style):
+  cohorts are dispatched and their per-node uploads land in a buffer at
+  simulated arrival times; the server commits an aggregation as soon as
+  ``async_commit`` (K) uploads have arrived, decaying each upload's
+  Alg. 2 weight by ``staleness_decay ** staleness`` (staleness = commits
+  since the upload's dispatch) and renormalizing over the K committed.
+  Per-node latency streams are counter-based (``numpy`` ``SeedSequence``
+  on ``(latency_seed, node, dispatch)`` — a persistent lognormal
+  per-node speed times an exponential per-dispatch draw), so runs are
+  deterministic and resumable: the buffer (uploads, arrival times,
+  dispatch versions, weights) rides in the checkpoint.
+* ``"overlapped"`` — software pipelining: round t+1's local fan-out is
+  dispatched against the pre-aggregation state and round t's aggregation
+  commits AFTER it is enqueued, so on the pod mesh the ``shard_map``
+  fan-out of the next round overlaps the cross-pod reduction of the
+  previous one (a staleness-1 delayed-aggregation schedule). The one
+  pending round rides in the checkpoint.
+
+One scheduler ``step`` == one server COMMIT == one session round, so
+eval cadence, early stopping and checkpoint hooks mean the same thing
+under every schedule.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fed.api import phases
+
+
+class Scheduler:
+    """One round-sequencing policy over a ``PhasedSubstrate``."""
+
+    name = "base"
+
+    def __init__(self, spec, substrate):
+        self.spec = spec
+        self.substrate = substrate
+
+    def step(self, session) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def flush(self, session) -> None:
+        """Commit any deferred work WITHOUT dispatching new cohorts —
+        drain the overlapped pipeline's pending round / the async
+        buffer's in-flight uploads. Explicit (``session.flush()``), not
+        part of ``run``: an automatic end-of-run flush would make a run
+        split across checkpoint/resume diverge from the uninterrupted
+        one. Sync has nothing in flight — no-op."""
+
+    # -- checkpoint boundary (buffered uploads etc.) --------------------
+    def state_flat(self) -> Dict[str, Any]:
+        return {}
+
+    def state_restore(self, flat: Dict[str, Any]) -> None:
+        if flat:
+            raise ValueError(f"checkpoint carries scheduler state but "
+                             f"{self.name!r} holds none")
+
+
+class SyncScheduler(Scheduler):
+    """Lock-step Alg. 2 — bit-compatible with the pre-scheduler session:
+    one fused ``run_round`` per step, keyed by the round index."""
+
+    name = "sync"
+
+    def step(self, session) -> Dict[str, Any]:
+        session.state, metrics = self.substrate.run_round(
+            session.state, session.round_key(session.round), session.round)
+        session.round += 1
+        return metrics
+
+
+class AsyncScheduler(Scheduler):
+    """Staleness-weighted buffered aggregation (module docstring)."""
+
+    name = "async"
+
+    def __init__(self, spec, substrate):
+        super().__init__(spec, substrate)
+        self.commit_k = (spec.async_commit if spec.async_commit is not None
+                         else max(1, spec.nodes_per_round // 2))
+        self.decay = spec.staleness_decay
+        self.seed = spec.latency_seed
+        self.clock = 0.0
+        self.dispatched = 0
+        # each entry: one node's in-flight upload + its arrival metadata
+        self.entries: List[Dict[str, Any]] = []
+
+    # latency streams are COUNTER-BASED — pure in (seed, node, dispatch)
+    # — so nothing about them needs checkpointing
+    def _latency(self, node: int, dispatch: int) -> float:
+        speed = np.random.default_rng(
+            [self.seed, node]).lognormal(mean=0.0, sigma=0.5)
+        draw = np.random.default_rng(
+            [self.seed, node, dispatch]).exponential()
+        return float(speed * draw)
+
+    def _dispatch(self, session) -> Dict[str, Any]:
+        """Send the next cohort to work against the CURRENT state."""
+        d = self.dispatched
+        session.state, cohort, received, metrics = phases.dispatch_round(
+            self.substrate, session.state, session.round_key(d), d)
+        sel = np.asarray(jax.device_get(cohort.sel)).reshape(-1)
+        base_w = np.asarray(jax.device_get(cohort.weights),
+                            dtype=np.float64).reshape(-1)
+        for i in range(sel.shape[0]):
+            node = int(sel[i])
+            # the timeline is kept float32-REPRESENTABLE so arrival
+            # times survive the checkpoint's array round-trip bit-exactly
+            # (restore may run under 32-bit jax)
+            self.entries.append({
+                "arrival": float(np.float32(
+                    self.clock + self._latency(node, d))),
+                "version": session.round,   # commits seen at dispatch
+                "weight": float(base_w[i]),
+                "node": node,
+                "born": d,
+                "up": phases.upload_slice(received, i),
+            })
+        self.dispatched += 1
+        return metrics
+
+    def step(self, session) -> Dict[str, Any]:
+        metrics: Dict[str, Any] = {}
+        while len(self.entries) < self.commit_k:
+            metrics = self._dispatch(session)
+        order = sorted(range(len(self.entries)),
+                       key=lambda j: (self.entries[j]["arrival"],
+                                      self.entries[j]["born"],
+                                      self.entries[j]["node"]))
+        take = [self.entries[j] for j in order[:self.commit_k]]
+        keep = set(order[:self.commit_k])
+        self.entries = [e for j, e in enumerate(self.entries)
+                        if j not in keep]
+        self.clock = max(self.clock, max(e["arrival"] for e in take))
+        stale = np.asarray([session.round - e["version"] for e in take],
+                           np.float64)
+        w = np.asarray([e["weight"] for e in take], np.float64) \
+            * self.decay ** stale
+        w = w / max(w.sum(), 1e-12)
+        received = phases.upload_stack([e["up"] for e in take])
+        session.state = self.substrate.aggregate(
+            session.state, received, jnp.asarray(w, jnp.float32))
+        session.round += 1
+        metrics = dict(metrics)
+        metrics.update(sched_clock=self.clock,
+                       sched_staleness=float(stale.mean()),
+                       sched_buffered=float(len(self.entries)))
+        return metrics
+
+    def flush(self, session) -> None:
+        """Commit ALL buffered uploads in one final staleness-weighted
+        aggregation (no new dispatches)."""
+        if not self.entries:
+            return
+        take = sorted(self.entries,
+                      key=lambda e: (e["arrival"], e["born"], e["node"]))
+        self.entries = []
+        self.clock = max(self.clock, max(e["arrival"] for e in take))
+        stale = np.asarray([session.round - e["version"] for e in take],
+                           np.float64)
+        w = np.asarray([e["weight"] for e in take], np.float64) \
+            * self.decay ** stale
+        w = w / max(w.sum(), 1e-12)
+        received = phases.upload_stack([e["up"] for e in take])
+        # a drain, not a scheduled round: the round counter already
+        # advanced when these uploads' commits were stepped
+        session.state = self.substrate.aggregate(
+            session.state, received, jnp.asarray(w, jnp.float32))
+
+    def state_flat(self) -> Dict[str, Any]:
+        if self.dispatched == 0 and not self.entries:
+            return {}
+        flat: Dict[str, Any] = {
+            "clock": np.float64(self.clock),
+            "dispatched": np.int64(self.dispatched),
+            "arrival": np.asarray([e["arrival"] for e in self.entries],
+                                  np.float64),
+            "version": np.asarray([e["version"] for e in self.entries],
+                                  np.int64),
+            "weight": np.asarray([e["weight"] for e in self.entries],
+                                 np.float64),
+            "node": np.asarray([e["node"] for e in self.entries],
+                               np.int64),
+            "born": np.asarray([e["born"] for e in self.entries],
+                               np.int64),
+            "up": {str(i): e["up"] for i, e in enumerate(self.entries)},
+        }
+        return flat
+
+    def state_restore(self, flat: Dict[str, Any]) -> None:
+        if not flat:
+            return
+        self.clock = float(np.asarray(flat["clock"]))
+        self.dispatched = int(np.asarray(flat["dispatched"]))
+        arrival = np.asarray(flat["arrival"]).reshape(-1)
+        version = np.asarray(flat["version"]).reshape(-1)
+        weight = np.asarray(flat["weight"]).reshape(-1)
+        node = np.asarray(flat["node"]).reshape(-1)
+        born = np.asarray(flat["born"]).reshape(-1)
+        self.entries = []
+        for i in range(arrival.shape[0]):
+            pre = f"up/{i}/"
+            up = self.substrate.upload_restore(
+                {k[len(pre):]: v for k, v in flat.items()
+                 if k.startswith(pre)})
+            self.entries.append({
+                "arrival": float(arrival[i]), "version": int(version[i]),
+                "weight": float(weight[i]), "node": int(node[i]),
+                "born": int(born[i]), "up": up,
+            })
+
+
+class OverlappedScheduler(Scheduler):
+    """Staleness-1 pipelining: local phase t+1 overlaps aggregate t."""
+
+    name = "overlapped"
+
+    def __init__(self, spec, substrate):
+        super().__init__(spec, substrate)
+        # the one in-flight round: (stacked received uploads, weights)
+        self.pending: Optional[Dict[str, Any]] = None
+
+    def step(self, session) -> Dict[str, Any]:
+        sub = self.substrate
+        r = session.round
+        # round r's fan-out is enqueued FIRST (it depends only on the
+        # pre-aggregation state), then round r-1's aggregation commits —
+        # with JAX async dispatch the shard_map fan-out and the
+        # cross-pod reduction are both in flight at once
+        state, cohort, received, metrics = phases.dispatch_round(
+            sub, session.state, session.round_key(r), r)
+        if self.pending is not None:
+            state = sub.aggregate(state, self.pending["up"],
+                                  self.pending["weights"])
+        self.pending = {"up": received, "weights": cohort.weights,
+                        "round": r}
+        session.state = state
+        session.round += 1
+        metrics = dict(metrics)
+        metrics["sched_pending"] = 1.0
+        return metrics
+
+    def flush(self, session) -> None:
+        """Commit the pending round (drain the 1-deep pipeline)."""
+        if self.pending is None:
+            return
+        session.state = self.substrate.aggregate(
+            session.state, self.pending["up"], self.pending["weights"])
+        self.pending = None
+
+    def state_flat(self) -> Dict[str, Any]:
+        if self.pending is None:
+            return {}
+        return {"pround": np.int64(self.pending["round"]),
+                "pweights": np.asarray(self.pending["weights"]),
+                "up": self.pending["up"]}
+
+    def state_restore(self, flat: Dict[str, Any]) -> None:
+        if not flat:
+            return
+        up = self.substrate.upload_restore(
+            {k[len("up/"):]: v for k, v in flat.items()
+             if k.startswith("up/")})
+        self.pending = {"up": up,
+                        "weights": jnp.asarray(flat["pweights"]),
+                        "round": int(np.asarray(flat["pround"]))}
+
+
+SCHEDULERS = {
+    "sync": SyncScheduler,
+    "async": AsyncScheduler,
+    "overlapped": OverlappedScheduler,
+}
+
+
+def validate_schedule(name: str) -> str:
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown schedule {name!r}; registered: "
+                         f"{sorted(SCHEDULERS)}")
+    return name
+
+
+def make_scheduler(spec, substrate) -> Scheduler:
+    """Build the scheduler a spec names."""
+    name = getattr(spec, "schedule", "sync")
+    return SCHEDULERS[validate_schedule(name)](spec, substrate)

@@ -1,13 +1,16 @@
 """``FederationSession`` — a drivable, checkpointable federation.
 
 One session = one federation run over a ``Substrate``: ``step()`` runs
-a single QuanFedPS round, ``run(rounds, callbacks=...)`` drives many
-with a small hook system (metric streaming, eval-every, early stop,
-periodic checkpoints), ``save(path)`` writes spec + round + RNG state +
-substrate state through ``repro.checkpoint``, and
-``FederationSession.resume(path)`` reconstructs the session and
-continues BIT-exactly — the resumed run and the uninterrupted run are
-indistinguishable.
+a single QuanFedPS round under the spec's SCHEDULER (``"sync"``
+lock-step, ``"async"`` staleness-weighted buffered commits,
+``"overlapped"`` pipelined dispatch — see ``repro.core.fed.api.
+scheduler``), ``run(rounds, callbacks=...)`` drives many with a small
+hook system (metric streaming, eval-every, early stop, periodic
+checkpoints), ``save(path)`` writes spec + round + RNG state +
+substrate state + in-flight scheduler state (async buffers and all)
+through ``repro.checkpoint``, and ``FederationSession.resume(path)``
+reconstructs the session and continues BIT-exactly — the resumed run
+and the uninterrupted run are indistinguishable.
 
 RNG contract: the round key for round ``t`` is a pure function of the
 session's checkpointed RNG state and ``t`` — by default
@@ -27,10 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro.core.fed.api.scheduler import Scheduler, make_scheduler
 from repro.core.fed.api.spec import FedSpec
 from repro.core.fed.api.substrate import Substrate, make_substrate
 
-CKPT_FORMAT = 1
+CKPT_FORMAT = 2  # 2: + scheduler state ("sched/..."); readable as 1
 
 
 def sequential_split_plan(key: jax.Array, rounds: int) -> jax.Array:
@@ -169,7 +173,8 @@ class FederationSession:
     def __init__(self, spec: FedSpec, substrate: Substrate, *,
                  key: jax.Array, state: Any, round: int = 0,
                  history: Optional[Dict[str, list]] = None,
-                 round_keys: Optional[jax.Array] = None):
+                 round_keys: Optional[jax.Array] = None,
+                 scheduler: Optional[Scheduler] = None):
         self.spec = spec
         self.substrate = substrate
         self.key = jnp.asarray(key)
@@ -179,6 +184,8 @@ class FederationSession:
             else {}
         self.round_keys = None if round_keys is None else \
             jnp.asarray(round_keys)
+        self.scheduler = scheduler if scheduler is not None else \
+            make_scheduler(spec, substrate)
         self.last_eval: Dict[str, float] = {}
         self.run_target: Optional[int] = None
         self._stop = False
@@ -221,11 +228,16 @@ class FederationSession:
             {k[len("state/"):]: v for k, v in flat.items()
              if k.startswith("state/")})
         plan = flat.get("rng/plan")
-        return cls(spec, substrate, key=flat["rng/base"], state=state,
+        sess = cls(spec, substrate, key=flat["rng/base"], state=state,
                    round=int(meta.get("step", 0)),
                    history={k: list(v)
                             for k, v in extra.get("history", {}).items()},
                    round_keys=plan)
+        # in-flight scheduler state (async buffers, overlapped pending)
+        sess.scheduler.state_restore(
+            {k[len("sched/"):]: v for k, v in flat.items()
+             if k.startswith("sched/")})
+        return sess
 
     # -- driving --------------------------------------------------------
     def round_key(self, t: int) -> jax.Array:
@@ -235,11 +247,9 @@ class FederationSession:
         return jax.random.fold_in(self.key, t)
 
     def step(self) -> Dict[str, Any]:
-        """One federation round; returns the substrate's round metrics."""
-        self.state, metrics = self.substrate.run_round(
-            self.state, self.round_key(self.round), self.round)
-        self.round += 1
-        return metrics
+        """One federation round — one server COMMIT under the spec's
+        scheduler; returns the round metrics."""
+        return self.scheduler.step(self)
 
     def run(self, rounds: int, callbacks: Iterable[Callback] = ()
             ) -> Dict[str, list]:
@@ -262,6 +272,14 @@ class FederationSession:
     def request_stop(self) -> None:
         """Ask ``run`` to stop after the current round (early-stop hook)."""
         self._stop = True
+
+    def flush(self) -> None:
+        """Drain the scheduler's deferred work (the overlapped pipeline's
+        pending round, the async buffer's in-flight uploads) WITHOUT
+        dispatching new cohorts. Explicit by design — never part of
+        ``run`` — so a run split across checkpoint/resume stays
+        bit-identical to the uninterrupted one. No-op under "sync"."""
+        self.scheduler.flush(self)
 
     # -- evaluation / history -------------------------------------------
     def evaluate(self) -> Dict[str, float]:
@@ -291,6 +309,9 @@ class FederationSession:
         }
         if self.round_keys is not None:
             tree["rng"]["plan"] = np.asarray(self.round_keys)
+        sched = self.scheduler.state_flat()
+        if sched:  # in-flight uploads ride in the checkpoint
+            tree["sched"] = sched
         extra = {
             "fed_spec": self.spec.to_json_dict(),
             "history": self.history,

@@ -2,9 +2,11 @@
 
 A spec says WHAT federation to run: the substrate ("quantum" |
 "classical"), the Alg. 1/2 shape (N, N_p, I_l), the strategy names
-(aggregation / participation / channel — validated against the shared
-``core/fed`` registries at construction, so a typo fails before any
-tracing), the substrate-specific knobs, and an optional DATA RECIPE
+(aggregation / participation / channel / round schedule / server-side
+outer optimizer — each validated against its shared registry at
+construction, so a typo fails before any tracing, in ``from_json`` as
+much as in direct construction), the substrate-specific knobs, and an
+optional DATA RECIPE
 that lets ``make_substrate`` rebuild the exact training data from the
 spec alone (which is what makes a checkpointed federation resumable
 from nothing but the checkpoint file).
@@ -48,6 +50,16 @@ class FedSpec:
     aggregation: str = "average"      # strategy registry
     participation: str = "uniform"    # schedule registry
     dropout_rate: float = 0.0
+    # --- round scheduling (scheduler registry) -------------------------
+    schedule: str = "sync"            # "sync" | "async" | "overlapped"
+    async_commit: Optional[int] = None    # K: commit when K uploads land
+    staleness_decay: float = 0.5      # async weight decay per commit
+    latency_seed: int = 0             # async simulated-latency streams
+    # --- server-side outer optimizer (server_opt registry) -------------
+    server_opt: str = "none"          # "none" | "momentum" | "nesterov"
+    server_momentum: float = 0.9
+    # --- channel -------------------------------------------------------
+    quantize_bits: Optional[int] = None   # channel registry: "quantize"
     # --- quantum substrate --------------------------------------------
     widths: Optional[Tuple[int, ...]] = None
     eta: float = 1.0
@@ -81,11 +93,31 @@ class FedSpec:
             raise ValueError(f"unknown substrate {self.substrate!r}; "
                              f"registered: {list(SUBSTRATES)}")
         # fail-loud registry validation at construction time
+        from repro.core.fed import server_opt as fserver_opt
+        from repro.core.fed.api import scheduler as fscheduler
+
         agg = strategies.get_aggregation(self.aggregation)
         participation.validate(self.participation)
-        fchannel.make_channel(
-            "hermitian" if self.upload_noise > 0.0 else "identity",
-            sigma=self.upload_noise)
+        fchannel.resolve_channel(self.upload_noise, self.quantize_bits)
+        fscheduler.validate_schedule(self.schedule)
+        fserver_opt.validate(self.server_opt)
+        if self.server_opt != "none" and agg.combine != "average":
+            raise ValueError(
+                f"server_opt {self.server_opt!r} smooths the aggregated "
+                f"additive delta; {self.aggregation!r} "
+                f"(combine={agg.combine!r}) has none — use an 'average' "
+                "combine strategy")
+        if not 0.0 <= self.server_momentum < 1.0:
+            raise ValueError(f"server_momentum must be in [0, 1), got "
+                             f"{self.server_momentum}")
+        if self.async_commit is not None and not (
+                1 <= self.async_commit <= self.nodes_per_round):
+            raise ValueError(
+                f"async_commit (K={self.async_commit}) must be in "
+                f"[1, nodes_per_round={self.nodes_per_round}]")
+        if not 0.0 < self.staleness_decay <= 1.0:
+            raise ValueError(f"staleness_decay must be in (0, 1], got "
+                             f"{self.staleness_decay}")
         if not (1 <= self.nodes_per_round <= self.num_nodes):
             raise ValueError(
                 f"need 1 <= nodes_per_round ({self.nodes_per_round}) <= "
@@ -132,6 +164,11 @@ class FedSpec:
                     f"classical substrate needs an additive aggregation; "
                     f"{self.aggregation!r} (combine={agg.combine!r}) is "
                     "quantum-only")
+            if self.upload_noise > 0.0:
+                raise ValueError(
+                    "upload_noise (Hermitian GUE channel) is quantum-only"
+                    " — real deltas have no GUE perturbation; use "
+                    "quantize_bits for a classical channel")
 
     # -- constructors ---------------------------------------------------
     @classmethod
@@ -189,7 +226,8 @@ class FedSpec:
             aggregation=self.aggregation, upload_noise=self.upload_noise,
             engine=self.engine, impl=self.impl,
             participation=self.participation,
-            dropout_rate=self.dropout_rate, fanout=self.fanout)
+            dropout_rate=self.dropout_rate, fanout=self.fanout,
+            quantize_bits=self.quantize_bits)
 
     @classmethod
     def from_quantum_config(cls, cfg, **data_recipe) -> "FedSpec":
@@ -203,12 +241,16 @@ class FedSpec:
             upload_noise=cfg.upload_noise, engine=cfg.engine,
             impl=cfg.impl, participation=cfg.participation,
             dropout_rate=cfg.dropout_rate, fanout=cfg.fanout,
-            **data_recipe)
+            quantize_bits=cfg.quantize_bits, **data_recipe)
 
     def to_classical_config(self) -> FederatedConfig:
         """The legacy ``FederatedConfig`` this spec denotes."""
         if self.substrate != "classical":
             raise ValueError("not a classical spec")
+        if self.quantize_bits is not None:
+            raise ValueError(
+                "legacy FederatedConfig cannot express the quantization "
+                "channel — drive this spec through FederationSession")
         return FederatedConfig(
             num_nodes=self.num_nodes, nodes_per_round=self.nodes_per_round,
             interval_length=self.interval_length,

@@ -1,12 +1,19 @@
 """``Substrate`` — what a federation round runs ON.
 
-The session drives federations through this four-method protocol and
+The session's scheduler drives federations through this protocol and
 never branches on which physics it is driving:
 
 * ``init_state(key, params=None)`` — build the opaque federation state
-  (global model + whatever per-node state the substrate keeps).
+  (global model + whatever per-node / server-optimizer state the
+  substrate keeps).
 * ``run_round(state, key, round)`` — one QuanFedPS synchronization
-  iteration (Alg. 1 + Alg. 2); returns ``(new_state, metrics)``.
+  iteration (Alg. 1 + Alg. 2): the CANONICAL composition of the four
+  round phases (``repro.core.fed.api.phases``), fused where the
+  substrate can; returns ``(new_state, metrics)``.
+* the four phases themselves — ``select`` / ``local_update`` /
+  ``transmit`` / ``aggregate`` (+ ``split_round_key`` and
+  ``upload_restore``) — for schedulers that interleave phases of
+  different rounds (async buffering, overlapped dispatch).
 * ``evaluate(state)`` — metric dict of PYTHON floats, pulled from the
   device in ONE ``jax.device_get`` (a single host sync per record, not
   one blocking ``float(...)`` per metric).
@@ -14,10 +21,10 @@ never branches on which physics it is driving:
   boundary: a nested tree of arrays for ``repro.checkpoint`` and its
   exact inverse.
 
-``QuantumSubstrate`` wraps ``core/quantum/federated.server_round`` /
-``evaluate``; ``ClassicalSubstrate`` wraps ``core/fed/fed_step.
-fed_train_round`` plus the per-node inner-optimizer state. Both can be
-built from a ``FedSpec`` alone via ``make_substrate`` when the spec
+``QuantumSubstrate`` wraps the ``core/quantum/federated`` phase kernels;
+``ClassicalSubstrate`` wraps ``core/fed/fed_step``'s (``node_uploads`` /
+``aggregate_deltas``) plus the per-node inner-optimizer state. Both can
+be built from a ``FedSpec`` alone via ``make_substrate`` when the spec
 carries a data recipe — which is what lets ``FederationSession.resume``
 reconstruct a federation from nothing but a checkpoint file.
 """
@@ -28,9 +35,11 @@ from typing import Any, Dict, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.fed import participation
+from repro.core.fed import channel as fchannel
+from repro.core.fed import participation, server_opt as fserver_opt
+from repro.core.fed import fed_step
+from repro.core.fed.api.phases import Cohort, compose_round
 from repro.core.fed.api.spec import FedSpec
-from repro.core.fed.fed_step import fed_train_round
 
 
 class Substrate(Protocol):
@@ -75,8 +84,11 @@ class QuantumSubstrate:
     """QuanFedPS on the dissipative-QNN simulator (Alg. 1/2 proper).
 
     State is the QNN params: a list of per-layer stacked complex
-    unitaries. Pass ``dataset``/``test`` explicitly, or leave them None
-    to rebuild both from the spec's data recipe (deterministic in
+    unitaries — or, with ``spec.server_opt != "none"``, the dict
+    ``{"params": [...], "smom": [...] | None}`` carrying the server
+    momentum on the aggregated generators (None until the first
+    aggregation). Pass ``dataset``/``test`` explicitly, or leave them
+    None to rebuild both from the spec's data recipe (deterministic in
     ``spec.data_seed``).
     """
 
@@ -113,32 +125,92 @@ class QuantumSubstrate:
         vmask = dataset.valid_mask()
         self._train_w = None if vmask is None else vmask.reshape(-1)
 
+    def _params_of(self, state):
+        return state["params"] if isinstance(state, dict) else state
+
+    def _smom_of(self, state):
+        return state.get("smom") if isinstance(state, dict) else None
+
+    def _pack(self, params, smom):
+        if self.spec.server_opt == "none":
+            return params  # legacy state shape, bit-compatible ckpts
+        return {"params": params, "smom": smom}
+
     def init_state(self, key: jax.Array, params: Any = None):
         from repro.core.quantum import qnn
-        if params is not None:
-            return params
-        return qnn.init_params(key, self.spec.widths)
+        if params is None:
+            params = qnn.init_params(key, self.spec.widths)
+        return self._pack(params, None)
 
     def run_round(self, state, key, round):
         from repro.core.quantum import federated as fed
         del round  # the quantum round is pure in (state, key)
-        return fed.server_round(state, self.dataset, key, self.cfg), {}
+        params, smom = fed.server_round_opt(
+            self._params_of(state), self._smom_of(state), self.dataset,
+            key, self.cfg, server_opt=self.spec.server_opt,
+            server_beta=self.spec.server_momentum)
+        return self._pack(params, smom), {}
 
+    # -- the four phases (see repro.core.fed.api.phases) ----------------
+    def split_round_key(self, key: jax.Array):
+        # the fused round's exact splits: selection / node / channel
+        k_sel, k_loc, k_tx = jax.random.split(jnp.asarray(key), 3)
+        return k_sel, k_loc, k_tx
+
+    def select(self, key: jax.Array, round: int) -> Cohort:
+        from repro.core.quantum import federated as fed
+        sel, pmask, weights = fed.select_phase(self.dataset, key, self.cfg)
+        return Cohort(sel=sel, mask=pmask, weights=weights, round=round)
+
+    def local_update(self, state, cohort: Cohort, key: jax.Array):
+        from repro.core.quantum import federated as fed
+        ks_all = fed.local_phase(self._params_of(state), self.dataset,
+                                 cohort.sel, key, self.cfg)
+        return state, ks_all, {}
+
+    def transmit(self, uploads, key: jax.Array):
+        from repro.core.quantum import federated as fed
+        return fed.transmit_phase(uploads, key, self.cfg)
+
+    def aggregate(self, state, received, weights: jax.Array):
+        from repro.core.quantum import federated as fed
+        params, smom = fed.aggregate_phase(
+            self._params_of(state), received, weights, self.cfg,
+            smom=self._smom_of(state), server_opt=self.spec.server_opt,
+            server_beta=self.spec.server_momentum)
+        return self._pack(params, smom)
+
+    def upload_restore(self, flat: Dict[str, Any]):
+        n_layers = len(self.spec.widths) - 1
+        return [jnp.asarray(flat[str(i)]) for i in range(n_layers)]
+
+    # -- evaluation / checkpoint ----------------------------------------
     def evaluate(self, state) -> Dict[str, float]:
         from repro.core.quantum import federated as fed
-        tr = fed.evaluate(state, self._train_in, self._train_out,
+        params = self._params_of(state)
+        tr = fed.evaluate(params, self._train_in, self._train_out,
                           self.spec.widths, impl=self.spec.impl,
                           weights=self._train_w)
-        te = fed.evaluate(state, self.test[0], self.test[1],
+        te = fed.evaluate(params, self.test[0], self.test[1],
                           self.spec.widths, impl=self.spec.impl)
         return _device_get_floats({"train": tr, "test": te})
 
     def state_flat(self, state) -> Dict[str, Any]:
-        return {"params": list(state)}
+        flat = {"params": list(self._params_of(state))}
+        smom = self._smom_of(state)
+        if smom is not None:
+            flat["smom"] = list(smom)
+        return flat
 
     def state_restore(self, flat: Dict[str, Any]):
         n_layers = len(self.spec.widths) - 1
-        return [jnp.asarray(flat[f"params/{i}"]) for i in range(n_layers)]
+        params = [jnp.asarray(flat[f"params/{i}"])
+                  for i in range(n_layers)]
+        smom = None
+        if any(k.startswith("smom/") for k in flat):
+            smom = [jnp.asarray(flat[f"smom/{i}"])
+                    for i in range(n_layers)]
+        return self._pack(params, smom)
 
 
 class ClassicalSubstrate:
@@ -146,10 +218,11 @@ class ClassicalSubstrate:
     weighted delta aggregation (``fed_train_round``) on a pytree model.
 
     State is ``{"params": model params, "opt": per-node inner optimizer
-    states}``. Data is a deterministic per-round pool stream rebuilt
-    from the spec (seeded ``token_batches``), so a resumed substrate
-    fast-forwards the stream to the checkpointed round and continues
-    bit-exactly.
+    states}`` (+ ``"sopt"``, the server-side outer-optimizer state, when
+    ``spec.server_opt != "none"``). Data is a deterministic per-round
+    pool stream rebuilt from the spec (seeded ``token_batches``), so a
+    resumed substrate fast-forwards the stream to the checkpointed round
+    and continues bit-exactly.
     """
 
     def __init__(self, spec: FedSpec, model=None, opt=None):
@@ -180,6 +253,12 @@ class ClassicalSubstrate:
             participation=spec.participation,
             dropout_rate=spec.dropout_rate, outer_lr=spec.outer_lr,
             delta_dtype=spec.delta_dtype)
+        self._delta_dt = fed_step.resolve_delta_dtype(self.fed_cfg)
+        self._server_sgd = fserver_opt.make_sgd(spec.server_opt,
+                                                spec.server_momentum)
+        # classical wire: quantization if the spec asks (Hermitian noise
+        # is quantum-only — real deltas have no GUE perturbation)
+        self._channel = fchannel.resolve_channel(0.0, spec.quantize_bits)
         self._pool_seqs = spec.node_pool_seqs or spec.node_batch * 2
         # unequal nodes: the pool must cover the requested true volumes
         self._pool_total = (sum(spec.node_sizes) if spec.node_sizes
@@ -196,7 +275,10 @@ class ClassicalSubstrate:
             params = self.model.init(key)
         opt_nodes = jax.vmap(lambda _: self.opt.init(params))(
             jnp.arange(self.spec.nodes_per_round))
-        return {"params": params, "opt": opt_nodes}
+        state = {"params": params, "opt": opt_nodes}
+        if self._server_sgd is not None:
+            state["sopt"] = self._server_sgd.init(params)
+        return state
 
     def _pool(self, round: int):
         """The round's global data pool — the ``round``-th item of the
@@ -216,6 +298,19 @@ class ClassicalSubstrate:
         return pool
 
     def run_round(self, state, key, round):
+        # the canonical phase composition — executed eagerly, so it is
+        # bit-exact with the pre-phase fed_train_round monolith
+        return compose_round(self, state, key, round)
+
+    # -- the four phases (see repro.core.fed.api.phases) ----------------
+    def split_round_key(self, key: jax.Array):
+        # legacy parity: node selection consumed the WHOLE round key;
+        # the local phase draws no randomness, and the channel key is a
+        # fresh derivation (only consumed by the new quantize channel)
+        key = jnp.asarray(key)
+        return key, jax.random.fold_in(key, 1), jax.random.fold_in(key, 2)
+
+    def select(self, key: jax.Array, round: int) -> Cohort:
         from repro.data import partition_iid, partition_non_iid
         from repro.data.partition import node_token_counts
 
@@ -243,18 +338,46 @@ class ClassicalSubstrate:
                 (x.shape[0], spec.interval_length, per) + x.shape[2:])
 
         node_batches = jax.tree.map(to_steps, sel_batches)
-        params, opt_nodes, metrics = fed_train_round(
+        weights = participation.round_weights(
+            self.fed_cfg.participation,
+            node_tokens[sel].astype(jnp.float32),
+            pmask.astype(jnp.float32))
+        return Cohort(sel=sel, mask=pmask, weights=weights, round=round,
+                      data=node_batches)
+
+    def local_update(self, state, cohort: Cohort, key: jax.Array):
+        del key  # the classical local pass draws no randomness
+        deltas, opt_nodes, metrics = fed_step.node_uploads(
             self.loss_fn, self.opt, state["params"], state["opt"],
-            node_batches, spec.lr, self.fed_cfg,
-            token_counts=node_tokens[sel], participation_mask=pmask)
-        return {"params": params, "opt": opt_nodes}, dict(metrics)
+            cohort.data, self.spec.lr, self._delta_dt)
+        state = dict(state, opt=opt_nodes)
+        return state, deltas, dict(jax.tree.map(jnp.mean, metrics))
+
+    def transmit(self, uploads, key: jax.Array):
+        return self._channel(key, uploads)
+
+    def aggregate(self, state, received, weights: jax.Array):
+        params, sopt = fed_step.aggregate_deltas(
+            state["params"], received, weights, self.spec.outer_lr,
+            server_sgd=self._server_sgd, server_state=state.get("sopt"))
+        state = dict(state, params=params)
+        if self._server_sgd is not None:
+            state["sopt"] = sopt
+        return state
+
+    def upload_restore(self, flat: Dict[str, Any]):
+        # a delta tree mirrors the params tree: a FLAT dict of arrays
+        return {k: jnp.asarray(v) for k, v in flat.items()}
 
     def evaluate(self, state) -> Dict[str, float]:
         loss = self.loss_fn(state["params"], self.eval_batch)[0]
         return _device_get_floats({"eval_loss": loss})
 
     def state_flat(self, state) -> Dict[str, Any]:
-        return {"params": state["params"], "opt": state["opt"]}
+        flat = {"params": state["params"], "opt": state["opt"]}
+        if "sopt" in state:
+            flat["sopt"] = state["sopt"]
+        return flat
 
     def state_restore(self, flat: Dict[str, Any]):
         from repro import checkpoint as ckpt
@@ -268,7 +391,13 @@ class ClassicalSubstrate:
         opt_nodes = ckpt.unflatten_like(
             opt_tpl, {k[len("opt/"):]: v for k, v in flat.items()
                       if k.startswith("opt/")})
-        return {"params": params, "opt": opt_nodes}
+        state = {"params": params, "opt": opt_nodes}
+        if self._server_sgd is not None:
+            state["sopt"] = ckpt.unflatten_like(
+                self._server_sgd.init(params),
+                {k[len("sopt/"):]: v for k, v in flat.items()
+                 if k.startswith("sopt/")})
+        return state
 
 
 def make_substrate(spec: FedSpec) -> Substrate:

@@ -2,7 +2,7 @@
 
 What happens to a node's update between node and server lives here —
 moved from ``repro.core.quantum.channel_noise`` (which remains as a
-back-compat shim) so that Hermitian upload noise, future quantization,
+back-compat shim) so that Hermitian upload noise, quantization,
 erasure, etc. share one registry instead of being quantum-path
 special cases.
 
@@ -16,11 +16,19 @@ The perturbed update unitary e^{i eps K_noisy} remains exactly unitary
 (the upload stays physical), so this probes robustness of the
 AGGREGATION — complementary to the paper's Fig. 3, which only pollutes
 the training DATA.
+
+The quantization model simulates a ``bits``-bit uplink: each uploaded
+tensor is uniform-STOCHASTIC-rounded (unbiased, E[q(x)] = x) onto a
+symmetric per-tensor grid of 2^{bits-1}-1 positive levels; complex
+uploads quantize their real and imaginary parts independently, so a
+quantum update matrix transits the wire as 2 x bits per entry and the
+reconstructed generator stays exactly Hermitian-symmetric in
+expectation.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Protocol
+from typing import List, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
@@ -55,14 +63,75 @@ class HermitianNoiseChannel:
         return perturb_updates(key, uploads, self.sigma)
 
 
-def make_channel(name: str, sigma: float = 0.0) -> ChannelModel:
-    """Channel registry: "identity" | "hermitian"."""
+@dataclasses.dataclass(frozen=True)
+class QuantizationChannel:
+    """Uniform stochastic rounding to a ``bits``-bit symmetric grid."""
+    bits: int
+
+    def __post_init__(self):
+        if not 2 <= int(self.bits) <= 16:
+            raise ValueError(f"quantization bits must be in [2, 16], got "
+                             f"{self.bits}")
+
+    def __call__(self, key: jax.Array, uploads):
+        leaves, treedef = jax.tree.flatten(uploads)
+        out = []
+        for i, x in enumerate(leaves):
+            k = jax.random.fold_in(key, i)
+            if jnp.issubdtype(x.dtype, jnp.complexfloating):
+                kr, ki = jax.random.split(k)
+                re = _stochastic_round(kr, jnp.real(x), self.bits)
+                im = _stochastic_round(ki, jnp.imag(x), self.bits)
+                out.append((re + 1j * im).astype(x.dtype))
+            else:
+                out.append(_stochastic_round(k, x, self.bits))
+        return jax.tree.unflatten(treedef, out)
+
+
+def _stochastic_round(key: jax.Array, x: jax.Array, bits: int) -> jax.Array:
+    """Unbiased rounding of a real tensor onto its per-tensor grid:
+    scale = max|x| / (2^{bits-1}-1); round x/scale up with probability
+    equal to its fractional part (E[result] = x exactly)."""
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jnp.max(jnp.abs(x)) / levels
+    scale = jnp.maximum(scale, jnp.finfo(x.dtype).tiny)
+    y = x / scale
+    lo = jnp.floor(y)
+    up = (jax.random.uniform(key, x.shape, dtype=x.dtype)
+          < (y - lo)).astype(x.dtype)
+    return (lo + up) * scale
+
+
+CHANNELS = ("identity", "hermitian", "quantize")
+
+
+def make_channel(name: str, sigma: float = 0.0, bits: int = 8
+                 ) -> ChannelModel:
+    """Channel registry: "identity" | "hermitian" | "quantize"."""
     if name == "identity":
         return IdentityChannel()
     if name == "hermitian":
         return HermitianNoiseChannel(sigma)
+    if name == "quantize":
+        return QuantizationChannel(bits)
     raise ValueError(f"unknown channel {name!r}; registered: "
-                     f"['identity', 'hermitian']")
+                     f"{list(CHANNELS)}")
+
+
+def resolve_channel(upload_noise: float = 0.0,
+                    quantize_bits: Optional[int] = None) -> ChannelModel:
+    """The channel a (spec-style) pair of knobs denotes: quantization
+    when ``quantize_bits`` is set, Hermitian noise when
+    ``upload_noise > 0``, identity otherwise. Setting both is rejected —
+    one channel per federation (compose explicitly if you mean it)."""
+    if quantize_bits is not None:
+        if upload_noise > 0.0:
+            raise ValueError("upload_noise and quantize_bits both set — "
+                             "a spec names ONE channel model")
+        return make_channel("quantize", bits=quantize_bits)
+    if upload_noise > 0.0:
+        return make_channel("hermitian", sigma=upload_noise)
+    return make_channel("identity")
 
 
 def hermitian_noise(key: jax.Array, shape, dtype) -> jax.Array:

@@ -39,12 +39,74 @@ def fed_params_axes(axes_tree, abstract_tree=None, num_nodes: int = 0):
                         is_leaf=lambda x: isinstance(x, tuple))
 
 
+def resolve_delta_dtype(fed_cfg: FederatedConfig) -> jnp.dtype:
+    """The wire dtype node uploads transit: the aggregation strategy's
+    ``wire_dtype`` when it names one, else the config's ``delta_dtype``.
+    Also the classical stack's fail-loud point for quantum-only
+    (multiplicative) strategies."""
+    agg = strategies.get_aggregation(fed_cfg.aggregation)
+    if agg.combine != "average":
+        raise ValueError(
+            f"classical substrate aggregates additive deltas; strategy "
+            f"{fed_cfg.aggregation!r} (combine={agg.combine!r}) is "
+            "quantum-only")
+    return jnp.dtype(agg.wire_dtype or fed_cfg.delta_dtype)
+
+
+def node_uploads(loss_fn: Callable, opt, params, opt_states_nodes,
+                 node_batches, lr, delta_dtype
+                 ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
+    """The LOCAL phase: every node's I_l-step delta, cast to the wire
+    dtype — the node's "upload". Returns (deltas, new opt states,
+    per-node metrics), all with the leading node axis."""
+
+    def one_node(opt_state, batches):
+        d, s, m = node_delta(loss_fn, opt, params, opt_state, batches, lr)
+        # the node's "upload": cast to the wire dtype before aggregation
+        return jax.tree.map(lambda x: x.astype(delta_dtype), d), s, m
+
+    return jax.vmap(one_node, in_axes=(0, 0))(opt_states_nodes,
+                                              node_batches)
+
+
+def aggregate_deltas(params, deltas, w: jax.Array, outer_lr,
+                     server_sgd=None, server_state=None):
+    """The AGGREGATE phase: weighted-mean the node deltas (Eq. 8) and
+    apply with the outer LR — directly, or through the server-side
+    outer optimizer (``repro.core.fed.server_opt``) when ``server_sgd``
+    is given. Returns ``(new_params, new server_state)``.
+
+    The leading axis of ``deltas`` is whatever set of uploads is being
+    committed — the full cohort in a sync round, K buffered uploads in
+    an async commit."""
+
+    def mean_leaf(d):
+        # weight per node BEFORE the sum so the cross-pod all-reduce
+        # happens in delta_dtype (a tensordot against fp32 weights would
+        # silently promote the wire traffic back to fp32)
+        wn = w.astype(d.dtype).reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.sum(d * wn, axis=0)             # cross-pod all-reduce
+
+    mean_d = jax.tree.map(mean_leaf, deltas)
+    if server_sgd is None:
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32)
+                          + outer_lr * d.astype(jnp.float32)).astype(
+                              p.dtype),
+            params, mean_d)
+        return new_params, None
+    # outer momentum: SGD descends, the aggregate ascends — flip signs
+    grads = jax.tree.map(lambda d: -d.astype(jnp.float32), mean_d)
+    return server_sgd.update(grads, server_state, params, outer_lr)
+
+
 def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
                     node_batches, lr, fed_cfg: FederatedConfig,
                     token_counts: Optional[jax.Array] = None,
                     participation_mask: Optional[jax.Array] = None
                     ) -> Tuple[Any, Any, Dict[str, jax.Array]]:
-    """One synchronization iteration.
+    """One synchronization iteration — the canonical local -> aggregate
+    phase composition (``node_uploads`` + ``aggregate_deltas``).
 
     params: global model (replicated across pods).
     opt_states_nodes: inner optimizer state with leading node axis.
@@ -57,22 +119,9 @@ def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
     Returns (new_params, new opt states, metrics).
     """
     n = fed_cfg.num_nodes
-
-    agg = strategies.get_aggregation(fed_cfg.aggregation)
-    if agg.combine != "average":
-        raise ValueError(
-            f"classical substrate aggregates additive deltas; strategy "
-            f"{fed_cfg.aggregation!r} (combine={agg.combine!r}) is "
-            "quantum-only")
-    delta_dt = jnp.dtype(agg.wire_dtype or fed_cfg.delta_dtype)
-
-    def one_node(opt_state, batches):
-        d, s, m = node_delta(loss_fn, opt, params, opt_state, batches, lr)
-        # the node's "upload": cast to the wire dtype before aggregation
-        return jax.tree.map(lambda x: x.astype(delta_dt), d), s, m
-
-    deltas, new_opt_states, metrics = jax.vmap(
-        one_node, in_axes=(0, 0))(opt_states_nodes, node_batches)
+    delta_dt = resolve_delta_dtype(fed_cfg)
+    deltas, new_opt_states, metrics = node_uploads(
+        loss_fn, opt, params, opt_states_nodes, node_batches, lr, delta_dt)
 
     sizes = (jnp.ones((n,), jnp.float32) if token_counts is None
              else token_counts.astype(jnp.float32))
@@ -80,16 +129,6 @@ def fed_train_round(loss_fn: Callable, opt, params, opt_states_nodes,
             else participation_mask.astype(jnp.float32))
     w = participation.round_weights(fed_cfg.participation, sizes, mask)
 
-    def agg_leaf(p, d):
-        # weight per node BEFORE the sum so the cross-pod all-reduce
-        # happens in delta_dtype (a tensordot against fp32 weights would
-        # silently promote the wire traffic back to fp32)
-        wn = w.astype(d.dtype).reshape((-1,) + (1,) * (d.ndim - 1))
-        mean_d = jnp.sum(d * wn, axis=0)           # cross-pod all-reduce
-        return (p.astype(jnp.float32)
-                + fed_cfg.outer_lr * mean_d.astype(jnp.float32)).astype(
-                    p.dtype)
-
-    new_params = jax.tree.map(agg_leaf, params, deltas)
+    new_params, _ = aggregate_deltas(params, deltas, w, fed_cfg.outer_lr)
     metrics = jax.tree.map(jnp.mean, metrics)
     return new_params, new_opt_states, metrics

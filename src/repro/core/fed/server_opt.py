@@ -1,0 +1,55 @@
+"""Server-side outer optimizer for the aggregated federation delta.
+
+The ROADMAP's "server-side optimizer state" lever: instead of applying
+the data-volume-weighted aggregate directly (Alg. 2 / FedAvg), the
+server runs ``optim/sgd.py``-style (Nesterov) momentum on it — FedAvgM
+/ DiLoCo on the classical substrate, and on the quantum substrate the
+same recursion applied to the averaged Hermitian GENERATORS K̄_k of the
+Eq. 8 update unitaries (so the applied update e^{i eps K_eff} stays
+exactly unitary; only for ``combine == "average"`` strategies — the
+multiplicative Eq. 6 product has no additive delta to smooth, which
+``FedSpec`` rejects at construction).
+
+Registry: ``"none"`` (the paper's server), ``"momentum"``,
+``"nesterov"``. The momentum state lives INSIDE the substrate state
+(``state_flat``), so checkpoints round-trip it and kill-and-resume
+stays bit-exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.optim.sgd import SGD
+
+SERVER_OPTS = ("none", "momentum", "nesterov")
+
+
+def validate(name: str) -> str:
+    if name not in SERVER_OPTS:
+        raise ValueError(f"unknown server_opt {name!r}; registered: "
+                         f"{list(SERVER_OPTS)}")
+    return name
+
+
+def make_sgd(name: str, beta: float) -> Optional[SGD]:
+    """The ``optim/sgd.py`` optimizer a server_opt name denotes (for the
+    classical substrate's fp32 delta trees); None for ``"none"``."""
+    validate(name)
+    if name == "none":
+        return None
+    return SGD(momentum=beta, nesterov=(name == "nesterov"))
+
+
+def generator_step(name: str, beta, momentum: Any, kbar: Any
+                   ) -> Tuple[Any, Any]:
+    """One momentum step on an aggregated (complex Hermitian) generator:
+    ``m' = beta m + K̄``; the applied generator is ``m'`` (momentum) or
+    ``K̄ + beta m'`` (nesterov) — the complex-safe mirror of
+    ``optim/sgd.SGD.update``. ``momentum=None`` means round 0 (zero
+    state). Returns ``(m', K_eff)``."""
+    validate(name)
+    if name == "none":
+        return None, kbar
+    m2 = kbar if momentum is None else beta * momentum + kbar
+    eff = kbar + beta * m2 if name == "nesterov" else m2
+    return m2, eff

@@ -1,6 +1,8 @@
-"""Back-compat shim: the Hermitian upload-noise model moved into the
-shared federation core — ``repro.core.fed.channel`` — where it lives
-behind the generic ``ChannelModel`` protocol alongside the identity
-channel (and future quantization models). Import from there."""
+"""Back-compat shim: the upload channel models moved into the shared
+federation core — ``repro.core.fed.channel`` — where they live behind
+the generic ``ChannelModel`` protocol and registry: the identity
+channel, Hermitian (GUE) upload noise, and the uniform-stochastic
+quantization channel. Import from there."""
 from repro.core.fed.channel import (  # noqa: F401
-    HermitianNoiseChannel, hermitian_noise, perturb_updates)
+    HermitianNoiseChannel, QuantizationChannel, hermitian_noise,
+    make_channel, perturb_updates)

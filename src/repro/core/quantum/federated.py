@@ -32,6 +32,16 @@ kernels, interpret mode on CPU). Both update-unitary chains are rolled
 into ``jax.lax.scan`` (constant-size jit graph in N_p and I_l), and all
 N_p x I_l x m_l update unitaries of a layer are formed by a single
 batched ``expm_herm``.
+
+Phased round protocol: the round is composed of four phases —
+``select_phase`` (participation sampling + Alg. 2 weights),
+``local_phase`` (the QuanFedNode fan-out), ``transmit_phase`` (channel
+model + wire cast) and ``aggregate_phase`` (strategy combine, optional
+server-side generator momentum). ``server_round`` remains the canonical
+composition, fused under ONE jit so sync training keeps its single
+compiled round; schedulers that interleave rounds (async buffering,
+overlapped dispatch) call the per-phase entry points, each jitted on
+its own.
 """
 from __future__ import annotations
 
@@ -44,7 +54,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.fed import channel as fchannel
-from repro.core.fed import participation, strategies
+from repro.core.fed import participation, server_opt as fserver_opt
+from repro.core.fed import strategies
 from repro.core.quantum import linalg as ql
 from repro.core.quantum import qnn
 from repro.core.quantum.data import QuantumDataset
@@ -68,6 +79,7 @@ class QuantumFedConfig(NamedTuple):
     participation: str = "uniform"    # schedule registry (fed.participation)
     dropout_rate: float = 0.0         # straggler rate for "dropout"
     fanout: str = "auto"              # "auto" | "vmap" | "shard_map"
+    quantize_bits: Optional[int] = None  # channel registry: "quantize"
 
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
@@ -198,30 +210,20 @@ def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
     return fan(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
-def _server_round(params: qnn.Params, dataset: QuantumDataset,
-                  key: jax.Array, eta, eps, cfg: QuantumFedConfig,
-                  mesh=None) -> qnn.Params:
-    k_sel, k_node, k_noise = jax.random.split(key, 3)
+# --------------------------------------------------------------- phases
+# The four phase bodies below are the round. `_server_round` composes
+# them under ONE jit (bit-compatible with the pre-phase monolith); the
+# `*_phase` wrappers further down jit each on its own for schedulers
+# that interleave phases of different rounds.
+
+def _select_impl(dataset: QuantumDataset, key: jax.Array,
+                 cfg: QuantumFedConfig):
+    """Alg. 2 node selection + the round's aggregation weights."""
     counts = dataset.node_counts()  # (N,) true data volumes N_n
     sel, pmask = participation.sample_nodes(
-        k_sel, cfg.num_nodes, cfg.nodes_per_round,
+        key, cfg.num_nodes, cfg.nodes_per_round,
         schedule=cfg.participation, node_sizes=counts,
         dropout_rate=cfg.dropout_rate)
-    node_in = dataset.phi_in[sel]    # (N_p, n_max, d_in)
-    node_out = dataset.phi_out[sel]  # (N_p, n_max, d_out)
-    node_keys = jax.random.split(k_node, cfg.nodes_per_round)
-    vmask = dataset.valid_mask()
-    node_mask = None if vmask is None else vmask[sel]
-
-    ks_all = _fan_out(params, node_in, node_out, node_keys, node_mask,
-                      eta, eps, cfg, mesh)
-
-    ch = fchannel.make_channel(
-        "hermitian" if cfg.upload_noise > 0.0 else "identity",
-        sigma=cfg.upload_noise)
-    ks_all = ch(k_noise, ks_all)
-
     # Alg. 2 data-volume weights N_n/N_t from the TRUE per-node counts,
     # renormalized over the nodes the schedule kept (dropout zeroes a
     # straggler's weight; size-proportional sampling pairs with uniform
@@ -229,12 +231,69 @@ def _server_round(params: qnn.Params, dataset: QuantumDataset,
     # complex state dtype only where the K's are scaled.
     weights = participation.round_weights(cfg.participation, counts[sel],
                                           pmask)
+    return sel, pmask, weights
 
+
+def _local_impl(params: qnn.Params, dataset: QuantumDataset,
+                sel: jax.Array, key: jax.Array, eta, eps,
+                cfg: QuantumFedConfig, mesh) -> List[jax.Array]:
+    """QuanFedNode on every selected node (vmapped or pod-sharded)."""
+    node_in = dataset.phi_in[sel]    # (N_p, n_max, d_in)
+    node_out = dataset.phi_out[sel]  # (N_p, n_max, d_out)
+    node_keys = jax.random.split(key, cfg.nodes_per_round)
+    vmask = dataset.valid_mask()
+    node_mask = None if vmask is None else vmask[sel]
+    return _fan_out(params, node_in, node_out, node_keys, node_mask,
+                    eta, eps, cfg, mesh)
+
+
+def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
+                   cfg: QuantumFedConfig) -> List[jax.Array]:
+    """Node -> server wire: channel model, then the strategy's cast."""
+    ch = fchannel.resolve_channel(cfg.upload_noise, cfg.quantize_bits)
+    ks_all = ch(key, ks_all)
     agg = strategies.get_aggregation(cfg.aggregation)
-    ks_all = strategies.wire_cast(ks_all, agg)
+    return strategies.wire_cast(ks_all, agg)
+
+
+def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
+                    weights: jax.Array, eps, server_beta,
+                    cfg: QuantumFedConfig, server_opt: str):
+    """Strategy combine; with ``server_opt`` != "none" the averaged
+    Hermitian generators K̄_k pass through server momentum first (state
+    ``smom``: per-layer arrays, or None for the zero round-0 state).
+    Returns ``(new_params, new_smom)``."""
+    agg = strategies.get_aggregation(cfg.aggregation)
     if agg.combine == "product":
-        return aggregate_product(params, ks_all, weights, eps, impl=cfg.impl)
-    return aggregate_average(params, ks_all, weights, eps, impl=cfg.impl)
+        # no additive delta to smooth (FedSpec rejects server_opt here)
+        return (aggregate_product(params, ks_all, weights, eps,
+                                  impl=cfg.impl), None)
+    if server_opt == "none":
+        return (aggregate_average(params, ks_all, weights, eps,
+                                  impl=cfg.impl), None)
+    new_params, new_smom = [], []
+    for i, (us, ks) in enumerate(zip(params, ks_all)):
+        k_bar = jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
+        m2, eff = fserver_opt.generator_step(
+            server_opt, server_beta, None if smom is None else smom[i],
+            k_bar)
+        upd = ql.expm_herm(eff, eps)  # e^{i eps K_eff} stays unitary
+        new_params.append(_chain(us, upd, cfg.impl))
+        new_smom.append(m2)
+    return new_params, new_smom
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "server_opt"))
+def _server_round(params: qnn.Params, smom, dataset: QuantumDataset,
+                  key: jax.Array, eta, eps, server_beta,
+                  cfg: QuantumFedConfig, mesh=None,
+                  server_opt: str = "none"):
+    k_sel, k_node, k_noise = jax.random.split(key, 3)
+    sel, _, weights = _select_impl(dataset, k_sel, cfg)
+    ks_all = _local_impl(params, dataset, sel, k_node, eta, eps, cfg, mesh)
+    ks_all = _transmit_impl(ks_all, k_noise, cfg)
+    return _aggregate_impl(params, smom, ks_all, weights, eps,
+                           server_beta, cfg, server_opt)
 
 
 def _resolve_fanout(cfg: QuantumFedConfig) -> str:
@@ -262,17 +321,91 @@ def _resolve_fanout(cfg: QuantumFedConfig) -> str:
 
 def server_round(params: qnn.Params, dataset: QuantumDataset,
                  key: jax.Array, cfg: QuantumFedConfig) -> qnn.Params:
-    """One QuanFedPS iteration: sample N_p nodes via the participation
-    schedule, run QuanFedNode on each (vmapped or pod-sharded), pass the
-    uploads through the channel model, aggregate per the strategy
-    registry into the global model.
+    """One QuanFedPS iteration: the canonical select -> local ->
+    transmit -> aggregate phase composition, fused under one jit.
 
     eta/eps are split out of cfg and traced so hyperparameter sweeps
     reuse one compiled round; the structural fields stay static.
     """
+    new_params, _ = server_round_opt(params, None, dataset, key, cfg)
+    return new_params
+
+
+def server_round_opt(params: qnn.Params, smom, dataset: QuantumDataset,
+                     key: jax.Array, cfg: QuantumFedConfig,
+                     server_opt: str = "none", server_beta: float = 0.9):
+    """``server_round`` threading the server-optimizer momentum state:
+    returns ``(new_params, new_smom)`` (``new_smom`` None when
+    ``server_opt == "none"``)."""
+    fserver_opt.validate(server_opt)
     static_cfg, mesh = _round_statics(cfg)
-    return _server_round(params, dataset, key, cfg.eta, cfg.eps,
-                         static_cfg, mesh)
+    return _server_round(params, smom, dataset, key, cfg.eta, cfg.eps,
+                         server_beta, static_cfg, mesh, server_opt)
+
+
+# Per-phase entry points: same bodies as the fused round, each under its
+# own jit, for schedulers that interleave phases of DIFFERENT rounds
+# (async buffering commits uploads born several dispatches ago;
+# overlapped dispatch enqueues round t+1's fan-out before round t's
+# aggregation). Numerics match the fused round to jit-boundary rounding
+# (<= 1e-10 under x64 — gated in tests/test_fed_schedulers.py).
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _select_jit(dataset, key, cfg):
+    return _select_impl(dataset, key, cfg)
+
+
+def select_phase(dataset: QuantumDataset, key: jax.Array,
+                 cfg: QuantumFedConfig):
+    """Phase 1: ``(sel, pmask, weights)`` for one round."""
+    static_cfg, _ = _round_statics(cfg)
+    return _select_jit(dataset, key, static_cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
+def _local_jit(params, dataset, sel, key, eta, eps, cfg, mesh):
+    return _local_impl(params, dataset, sel, key, eta, eps, cfg, mesh)
+
+
+def local_phase(params: qnn.Params, dataset: QuantumDataset,
+                sel: jax.Array, key: jax.Array, cfg: QuantumFedConfig
+                ) -> List[jax.Array]:
+    """Phase 2: the QuanFedNode fan-out; per-layer (N_p, I_l, m, d, d)."""
+    static_cfg, mesh = _round_statics(cfg)
+    return _local_jit(params, dataset, sel, key, cfg.eta, cfg.eps,
+                      static_cfg, mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _transmit_jit(ks_all, key, cfg):
+    return _transmit_impl(ks_all, key, cfg)
+
+
+def transmit_phase(ks_all: List[jax.Array], key: jax.Array,
+                   cfg: QuantumFedConfig) -> List[jax.Array]:
+    """Phase 3: channel model + strategy wire cast."""
+    static_cfg, _ = _round_statics(cfg)
+    return _transmit_jit(ks_all, key, static_cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "server_opt"))
+def _aggregate_jit(params, smom, ks_all, weights, eps, server_beta, cfg,
+                   server_opt):
+    return _aggregate_impl(params, smom, ks_all, weights, eps,
+                           server_beta, cfg, server_opt)
+
+
+def aggregate_phase(params: qnn.Params, ks_all: List[jax.Array],
+                    weights: jax.Array, cfg: QuantumFedConfig,
+                    smom=None, server_opt: str = "none",
+                    server_beta: float = 0.9):
+    """Phase 4: strategy combine into the global model; returns
+    ``(new_params, new_smom)``. ``ks_all`` may stack ANY number of
+    uploads (async commits K of a cohort's N_p)."""
+    fserver_opt.validate(server_opt)
+    static_cfg, _ = _round_statics(cfg)
+    return _aggregate_jit(params, smom, ks_all, weights, cfg.eps,
+                          server_beta, static_cfg, server_opt)
 
 
 def _round_statics(cfg: QuantumFedConfig):
@@ -292,8 +425,8 @@ def lower_server_round(params: qnn.Params, dataset: QuantumDataset,
     """Lower (not run) one round under the ambient mesh — the dryrun /
     benchmark hook, using the same static-cfg protocol as training."""
     static_cfg, mesh = _round_statics(cfg)
-    return _server_round.lower(params, dataset, key, cfg.eta, cfg.eps,
-                               static_cfg, mesh)
+    return _server_round.lower(params, None, dataset, key, cfg.eta,
+                               cfg.eps, 0.0, static_cfg, mesh, "none")
 
 
 @functools.partial(jax.jit, static_argnames=("widths", "impl"))

@@ -47,9 +47,12 @@ class _RoundLog(api.Callback):
 
     def on_round_end(self, session, metrics):
         m = session.record_eval()
-        train = float(metrics.get("loss", float("nan")))
+        train = metrics.get("loss")
+        # an async commit may consume only buffered uploads — no fresh
+        # local pass, hence no train loss for that round
+        ts = f"{float(train):.4f}" if train is not None else "(buffered)"
         print(f"round {session.round:2d}  eval loss {m['eval_loss']:.4f}  "
-              f"train loss {train:.4f}  ({time.time()-self.t0:.0f}s)")
+              f"train loss {ts}  ({time.time()-self.t0:.0f}s)")
 
 
 def _extend_key_plan(sess, rounds: int) -> None:
@@ -88,7 +91,9 @@ def build_spec(args) -> api.FedSpec:
         interval_length=args.interval, lr=args.lr, outer_lr=args.outer_lr,
         participation=args.participation, dropout_rate=args.dropout,
         node_batch=args.node_batch, seq_len=args.seq, node_sizes=sizes,
-        data_iid=args.iid, data_seed=args.seed)
+        data_iid=args.iid, data_seed=args.seed,
+        schedule=args.schedule, async_commit=args.async_commit,
+        server_opt=args.server_opt, server_momentum=args.server_momentum)
 
 
 def main(argv=None):
@@ -115,6 +120,18 @@ def main(argv=None):
                     help="node-selection schedule (shared registry)")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="straggler rate for --participation dropout")
+    ap.add_argument("--schedule", default="sync",
+                    choices=sorted(api.SCHEDULERS),
+                    help="round scheduler (sync lock-step, async "
+                    "staleness-weighted buffer, overlapped pipeline)")
+    ap.add_argument("--async-commit", type=int, default=None,
+                    help="async: commit when K uploads land "
+                    "(default N_p//2)")
+    ap.add_argument("--server-opt", default="none",
+                    choices=["none", "momentum", "nesterov"],
+                    help="server-side outer optimizer on the "
+                    "aggregated delta")
+    ap.add_argument("--server-momentum", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", help="session checkpoint path")
     ap.add_argument("--ckpt-every", type=int, default=1)
