@@ -1,12 +1,15 @@
-"""Old (dense full-space) vs new (local-contraction) quantum engine:
-per-round ``server_round`` wall time across growing widths, the headline
-number of the engine rebuild — plus the strategy-driven round: wall time
-per aggregation mode (product / average / served) and the shard_map
-pod-sharded fan-out (timed in a subprocess with faked host devices, the
-dryrun trick). Emits ``BENCH_engine.json`` so later PRs can track the
-trajectory.
+"""Quantum engine trajectory: per-round ``server_round`` wall time of
+the three engine generations across growing widths — ``dense`` (seed
+full-space), ``local_opb`` (PR-1 local contractions, operator-space B
+chain) and ``local`` (low-rank ensemble B chains, the current default)
+— the headline numbers of the engine rebuild. Plus the strategy-driven
+round: wall time per aggregation mode (product / average / served) and
+the shard_map pod-sharded fan-out (timed in a subprocess with faked
+host devices, the dryrun trick). Emits ``BENCH_engine.json`` so later
+PRs can track the trajectory.
 
     PYTHONPATH=src python -m benchmarks.bench_engine [--out BENCH_engine.json]
+    PYTHONPATH=src python -m benchmarks.bench_engine --quick   # CI smoke
 """
 from __future__ import annotations
 
@@ -25,8 +28,16 @@ from repro.core.quantum import federated as fed
 from repro.core.quantum import qnn
 
 # widths, timing reps (the dense path at (4,5,4) runs 512-dim dense
-# sandwiches — one rep is plenty to resolve a multi-second round)
-WIDTH_SETS = (((2, 3, 2), 5), ((3, 4, 3), 3), ((4, 5, 4), 1))
+# sandwiches — one rep is plenty to resolve a multi-second round); the
+# deep (3,3,3,3) cell exercises the ensemble compression (QR rank
+# bounds) that keeps deep networks off the multiplicative blow-up.
+WIDTH_SETS = (((2, 3, 2), 5), ((3, 4, 3), 3), ((4, 5, 4), 1),
+              ((3, 3, 3, 3), 3))
+
+# the tiny cell the CI smoke job runs (seconds, not minutes)
+QUICK_WIDTH_SETS = (((2, 3, 2), 3),)
+
+ENGINES = ("local", "local_opb", "dense")
 
 AGG_MODES = ("product", "average", "served")
 
@@ -73,11 +84,11 @@ def time_round(cfg, params, ds, key, reps):
     return (time.perf_counter() - t0) / reps
 
 
-def bench_engines(rows):
-    print("# server_round wall time: dense full-space (seed) vs local "
-          "contractions")
+def bench_engines(rows, width_sets=WIDTH_SETS):
+    print("# server_round wall time: dense full-space (seed) vs "
+          "local_opb (PR-1 operator-B) vs local (low-rank ensemble B)")
     results = []
-    for widths, reps in WIDTH_SETS:
+    for widths, reps in width_sets:
         key = jax.random.PRNGKey(0)
         _, ds, _ = qdata.make_federated_dataset(key, widths[0], num_nodes=4,
                                                 n_per_node=4, n_test=4)
@@ -85,19 +96,26 @@ def bench_engines(rows):
         cfg = qnn_232.config(widths=widths, num_nodes=4, nodes_per_round=2,
                              interval_length=2, eps=0.05)
         times = {}
-        for engine in ("local", "dense"):
+        for engine in ENGINES:
             times[engine] = time_round(cfg._replace(engine=engine), params,
                                        ds, jax.random.PRNGKey(2), reps)
         speedup = times["dense"] / times["local"]
+        speedup_opb = times["local_opb"] / times["local"]
         name = "-".join(map(str, widths))
         print(f"  widths={widths}  dense {times['dense']*1e3:9.2f} ms"
-              f"  local {times['local']*1e3:9.2f} ms  speedup {speedup:6.1f}x")
+              f"  local_opb {times['local_opb']*1e3:9.2f} ms"
+              f"  local {times['local']*1e3:9.2f} ms"
+              f"  speedup {speedup:6.1f}x (vs opb {speedup_opb:5.1f}x)")
         results.append({"widths": list(widths),
                         "dense_ms": times["dense"] * 1e3,
+                        "local_opb_ms": times["local_opb"] * 1e3,
                         "local_ms": times["local"] * 1e3,
-                        "speedup": speedup})
+                        "speedup": speedup,
+                        "speedup_vs_opb": speedup_opb})
         rows.append((f"engine_round/{name}/local", times["local"] * 1e6,
-                     f"speedup={speedup:.1f}x"))
+                     f"speedup={speedup:.1f}x vs_opb={speedup_opb:.1f}x"))
+        rows.append((f"engine_round/{name}/local_opb",
+                     times["local_opb"] * 1e6, "PR-1 operator-B baseline"))
         rows.append((f"engine_round/{name}/dense", times["dense"] * 1e6,
                      "seed full-space path"))
     return results
@@ -154,19 +172,25 @@ def bench_shard_map(rows):
     return result
 
 
-def main(rows=None, out_path: str = "BENCH_engine.json"):
+def main(rows=None, out_path: str = "BENCH_engine.json",
+         quick: bool = False):
+    """quick=True runs only the tiny width cell and skips the
+    aggregation/shard_map sections — the CI smoke profile."""
     rows = rows if rows is not None else []
-    engine_results = bench_engines(rows)
-    agg_results = bench_aggregation_modes(rows)
-    shard_results = bench_shard_map(rows)
+    engine_results = bench_engines(rows,
+                                   QUICK_WIDTH_SETS if quick else WIDTH_SETS)
+    agg_results = None if quick else bench_aggregation_modes(rows)
+    shard_results = None if quick else bench_shard_map(rows)
     if out_path:
         payload = {"bench": "quantum_engine_server_round",
                    "backend": jax.default_backend(),
                    "config": {"num_nodes": 4, "nodes_per_round": 2,
                               "interval_length": 2, "n_per_node": 4},
-                   "results": engine_results,
-                   "aggregation_modes": agg_results,   # per-section config
-                   "shard_map_fanout": shard_results}  # inside each entry
+                   "engines": list(ENGINES),
+                   "results": engine_results}
+        if not quick:
+            payload["aggregation_modes"] = agg_results  # per-section config
+            payload["shard_map_fanout"] = shard_results  # inside each entry
         with open(out_path, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"  wrote {out_path}")
@@ -176,5 +200,8 @@ def main(rows=None, out_path: str = "BENCH_engine.json"):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny cell only, no aggregation/shard_map "
+                    "sections (CI smoke)")
     args = ap.parse_args()
-    main(out_path=args.out)
+    main(out_path=args.out, quick=args.quick)

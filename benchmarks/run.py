@@ -6,6 +6,10 @@ perf. Prints a ``name,us_per_call,derived`` CSV summary at the end.
     # spec-driven federation sweep across round schedulers:
     PYTHONPATH=src python -m benchmarks.run --spec benchmarks/specs \
         --rounds 3 --schedules sync,async,overlapped
+
+    # quantum engine trajectory (dense vs local_opb vs low-rank local):
+    PYTHONPATH=src python -m benchmarks.run --engine-bench \
+        [--quick] [--out BENCH_engine.json]
 """
 from __future__ import annotations
 
@@ -49,10 +53,28 @@ def main() -> None:
     ap.add_argument("--schedules", default="",
                     help="--spec: comma-separated scheduler overrides "
                     "(default: each spec's own schedule)")
-    ap.add_argument("--out", default="BENCH_fed.json",
-                    help="--spec: output JSON path")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (--spec: BENCH_fed.json; "
+                    "--engine-bench: BENCH_engine.json)")
+    ap.add_argument("--engine-bench", action="store_true",
+                    help="run the quantum engine trajectory benchmark "
+                    "(dense vs local_opb vs low-rank local) instead of "
+                    "the suites")
+    ap.add_argument("--quick", action="store_true",
+                    help="--engine-bench: tiny cell only (CI smoke)")
     args = ap.parse_args()
     names = [n for n in args.only.split(",") if n] or list(SUITES)
+
+    if args.engine_bench:
+        rows = []
+        t0 = time.time()
+        bench_engine.main(rows, out_path=args.out or "BENCH_engine.json",
+                          quick=args.quick)
+        print(f"\n==== CSV summary ({time.time()-t0:.0f}s total) ====")
+        print("name,us_per_call,derived")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        return
 
     if args.spec:
         from benchmarks import bench_fed
@@ -60,7 +82,8 @@ def main() -> None:
         t0 = time.time()
         bench_fed.main(rows, args.spec, rounds=args.rounds,
                        schedules=[s for s in args.schedules.split(",")
-                                  if s] or None, out=args.out)
+                                  if s] or None,
+                       out=args.out or "BENCH_fed.json")
         print(f"\n==== CSV summary ({time.time()-t0:.0f}s total) ====")
         print("name,us_per_call,derived")
         for name, us, derived in rows:

@@ -147,7 +147,7 @@ class FedSpec:
                                  f"layers, got {self.widths!r}")
             if any(int(w) < 1 for w in self.widths):
                 raise ValueError(f"widths must be positive: {self.widths}")
-            if self.engine not in ("local", "dense"):
+            if self.engine not in ("local", "local_opb", "dense"):
                 raise ValueError(f"unknown engine {self.engine!r}")
             if self.impl not in ("xla", "pallas"):
                 raise ValueError(f"unknown impl {self.impl!r}")

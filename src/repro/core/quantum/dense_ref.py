@@ -102,9 +102,11 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     if weights is None:
         denom = phi_in.shape[0]
     else:
-        w = weights.astype(jnp.float32)
+        # weights stay in the state's REAL dtype (float64 under x64) so
+        # weighted unequal-node rounds keep the <=1e-10 parity budget.
+        w = weights.astype(ql.real_dtype(sigma_l.dtype))
         sigma_l = sigma_l * w[:, None, None].astype(sigma_l.dtype)
-        denom = jnp.maximum(jnp.sum(w), 1e-12).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(w), jnp.asarray(1e-12, w.dtype))
     rhos = feedforward(params, rho_in, widths)
     sigmas = backward(params, sigma_l, widths)
 

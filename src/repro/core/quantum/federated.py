@@ -25,13 +25,20 @@ round's one cross-pod reduction (mirroring ``core/fed/fed_step.py``).
 present), "vmap", or "shard_map".
 
 Engine dispatch: ``QuantumFedConfig.engine`` selects the QNN simulation
-path (``"local"`` tensor contractions, default; ``"dense"`` seed
-full-space reference) and ``QuantumFedConfig.impl`` the backend for the
-dense inner products (``"xla"`` default; ``"pallas"`` for the TPU
-kernels, interpret mode on CPU). Both update-unitary chains are rolled
-into ``jax.lax.scan`` (constant-size jit graph in N_p and I_l), and all
-N_p x I_l x m_l update unitaries of a layer are formed by a single
-batched ``expm_herm``.
+path (``"local"`` low-rank vector ensembles on BOTH Prop.-1 chains,
+default; ``"local_opb"`` the previous operator-space-B local engine,
+kept as benchmark baseline; ``"dense"`` seed full-space reference) and
+``QuantumFedConfig.impl`` the backend for the dense inner products
+(``"xla"`` default; ``"pallas"`` for the TPU kernels — including the
+fused ensemble-commutator-trace kernel — interpret mode on CPU). Both
+update-unitary chains are rolled into ``jax.lax.scan`` (constant-size
+jit graph in N_p and I_l), and all N_p x I_l x m_l update unitaries of
+a layer are formed by a single batched ``expm_herm``. In the fused
+round the node pass exports its per-K eigh factors and — when the
+transmit phase is an exact identity (product combine, full-precision
+wire, no channel noise/quantization) — ``aggregate_product`` reuses
+them at the upload scale (e^{i eps (wK)} = V e^{i eps w lam} V†), so
+each K is factored once per round instead of twice.
 
 Phased round protocol: the round is composed of four phases —
 ``select_phase`` (participation sampling + Alg. 2 weights),
@@ -84,7 +91,8 @@ class QuantumFedConfig(NamedTuple):
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
                 key: jax.Array, eta, eps, cfg: QuantumFedConfig,
-                mask: Optional[jax.Array] = None) -> List[jax.Array]:
+                mask: Optional[jax.Array] = None,
+                return_factors: bool = False):
     """QuanFedNode: I_l temporary-update steps on one node's local data.
 
     mask: optional (n_per,) validity mask for padded unequal-size nodes —
@@ -94,7 +102,11 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
     Returns the per-step update matrices K_{n,k}, stacked per layer as
     (I_l, m_l, d, d). (Update *unitaries* are formed server-side from
     these; mathematically identical to Alg. 1's local storage and it lets
-    both aggregation modes share one node pass.)
+    both aggregation modes share one node pass.) With
+    ``return_factors=True`` also returns the per-K eigh factors the
+    temporary updates were formed from — (lam, v) per layer, stacked
+    (I_l, m_l, d) / (I_l, m_l, d, d) — so a product-combine server can
+    exponentiate the SAME K at the upload scale without a second eigh.
     """
     n_per = phi_in.shape[0]
 
@@ -116,11 +128,14 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
         ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
                                  engine=cfg.engine, impl=cfg.impl,
                                  weights=b_w)
-        p = qnn.apply_updates(p, ks, eps, impl=cfg.impl)
-        return p, ks
+        factors = qnn.eigh_updates(ks)
+        p = qnn.apply_updates_eigh(p, factors, eps, impl=cfg.impl)
+        return p, (ks, factors)
 
     keys = jax.random.split(key, cfg.interval_length)
-    _, ks_seq = jax.lax.scan(one_step, params, keys)
+    _, (ks_seq, factors_seq) = jax.lax.scan(one_step, params, keys)
+    if return_factors:
+        return ks_seq, factors_seq
     return ks_seq  # list per layer: (I_l, m_l, d, d)
 
 
@@ -134,16 +149,28 @@ def _chain(us: jax.Array, upd: jax.Array, impl: str) -> jax.Array:
 
 
 def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
-                      weights: jax.Array, eps, *, impl: str = "xla"
-                      ) -> qnn.Params:
+                      weights: jax.Array, eps, *, impl: str = "xla",
+                      factors=None) -> qnn.Params:
     """Eq. 6: U^{l,j} = prod_{k=I_l}^{1} prod_{n} e^{i eps w_n K_{n,k}},
-    then U_{t+1} = U^{l,j} U_t^{l,j}."""
+    then U_{t+1} = U^{l,j} U_t^{l,j}.
+
+    factors: optional per-layer (lam, v) eigh factors of the UNSCALED
+    K's (exported by the node pass). When the wire between local and
+    aggregate phases is an exact identity they are still valid and
+    e^{i eps (w K)} = V e^{i eps w lam} V† skips the second eigh of
+    every K in the round.
+    """
     new_params = []
-    for us, ks in zip(params, ks_all):
+    for li, (us, ks) in enumerate(zip(params, ks_all)):
         # ks: (N_p, I_l, m_l, d, d); one batched expm forms every scaled
         # update unitary of the round at once (weights cast here only).
-        w = weights[:, None, None, None, None].astype(ks.dtype)
-        upd = ql.expm_herm(ks * w, eps)
+        if factors is None:
+            w = weights[:, None, None, None, None].astype(ks.dtype)
+            upd = ql.expm_herm(ks * w, eps)
+        else:
+            lam, v = factors[li]  # (N_p, I_l, m_l, d), (N_p, I_l, m_l, d, d)
+            wl = weights[:, None, None, None].astype(lam.dtype)
+            upd = ql.expm_eigh(lam * wl, v, eps)
         # Eq. 6 application order: interval step k outermost (k=1 applied
         # first), node n innermost — flatten to one scan sequence.
         seq = jnp.swapaxes(upd, 0, 1).reshape((-1,) + upd.shape[2:])
@@ -165,25 +192,29 @@ def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
 
 def _node_batch(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
                 node_keys: jax.Array, node_mask: Optional[jax.Array],
-                eta, eps, cfg: QuantumFedConfig) -> List[jax.Array]:
+                eta, eps, cfg: QuantumFedConfig,
+                with_factors: bool = False):
     """vmap the QuanFedNode pass over the leading node axis."""
     if node_mask is None:
-        f = lambda ni, no, nk: node_update(params, ni, no, nk, eta, eps, cfg)
+        f = lambda ni, no, nk: node_update(params, ni, no, nk, eta, eps,
+                                           cfg, return_factors=with_factors)
         return jax.vmap(f)(node_in, node_out, node_keys)
     f = lambda ni, no, nk, nm: node_update(params, ni, no, nk, eta, eps,
-                                           cfg, nm)
+                                           cfg, nm,
+                                           return_factors=with_factors)
     return jax.vmap(f)(node_in, node_out, node_keys, node_mask)
 
 
 def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
              node_keys: jax.Array, node_mask: Optional[jax.Array],
-             eta, eps, cfg: QuantumFedConfig, mesh) -> List[jax.Array]:
+             eta, eps, cfg: QuantumFedConfig, mesh,
+             with_factors: bool = False):
     """Per-node fan-out: vmap, or shard_map over the 'fed_node' mesh axis
     (each pod runs its slice of the sampled nodes; the weighted
     aggregation that follows is the round's one cross-pod reduction)."""
     if cfg.fanout != "shard_map":
         return _node_batch(params, node_in, node_out, node_keys, node_mask,
-                           eta, eps, cfg)
+                           eta, eps, cfg, with_factors)
     axis = rules.fed_fanout_axis(mesh) if mesh is not None else None
     if axis is None:
         raise ValueError(
@@ -197,12 +228,12 @@ def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
     rep, shard = P(), P(axis)
     if node_mask is None:
         body = lambda p, ni, no, nk, et, ep: _node_batch(
-            p, ni, no, nk, None, et, ep, cfg)
+            p, ni, no, nk, None, et, ep, cfg, with_factors)
         in_specs = (rep, shard, shard, shard, rep, rep)
         args = (params, node_in, node_out, node_keys, eta, eps)
     else:
         body = lambda p, ni, no, nk, nm, et, ep: _node_batch(
-            p, ni, no, nk, nm, et, ep, cfg)
+            p, ni, no, nk, nm, et, ep, cfg, with_factors)
         in_specs = (rep, shard, shard, shard, shard, rep, rep)
         args = (params, node_in, node_out, node_keys, node_mask, eta, eps)
     fan = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=shard,
@@ -236,7 +267,7 @@ def _select_impl(dataset: QuantumDataset, key: jax.Array,
 
 def _local_impl(params: qnn.Params, dataset: QuantumDataset,
                 sel: jax.Array, key: jax.Array, eta, eps,
-                cfg: QuantumFedConfig, mesh) -> List[jax.Array]:
+                cfg: QuantumFedConfig, mesh, with_factors: bool = False):
     """QuanFedNode on every selected node (vmapped or pod-sharded)."""
     node_in = dataset.phi_in[sel]    # (N_p, n_max, d_in)
     node_out = dataset.phi_out[sel]  # (N_p, n_max, d_out)
@@ -244,7 +275,17 @@ def _local_impl(params: qnn.Params, dataset: QuantumDataset,
     vmask = dataset.valid_mask()
     node_mask = None if vmask is None else vmask[sel]
     return _fan_out(params, node_in, node_out, node_keys, node_mask,
-                    eta, eps, cfg, mesh)
+                    eta, eps, cfg, mesh, with_factors)
+
+
+def _factors_survive_wire(cfg: QuantumFedConfig) -> bool:
+    """True when the node pass's eigh factors are still valid at the
+    aggregate phase: product combine (the only mode exponentiating the
+    per-node K's) with an exact-identity transmit phase — full-precision
+    wire, no channel noise, no quantization."""
+    agg = strategies.get_aggregation(cfg.aggregation)
+    return (agg.combine == "product" and agg.wire_dtype is None
+            and cfg.upload_noise == 0.0 and cfg.quantize_bits is None)
 
 
 def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
@@ -258,7 +299,7 @@ def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
 
 def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
                     weights: jax.Array, eps, server_beta,
-                    cfg: QuantumFedConfig, server_opt: str):
+                    cfg: QuantumFedConfig, server_opt: str, factors=None):
     """Strategy combine; with ``server_opt`` != "none" the averaged
     Hermitian generators K̄_k pass through server momentum first (state
     ``smom``: per-layer arrays, or None for the zero round-0 state).
@@ -267,7 +308,7 @@ def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
     if agg.combine == "product":
         # no additive delta to smooth (FedSpec rejects server_opt here)
         return (aggregate_product(params, ks_all, weights, eps,
-                                  impl=cfg.impl), None)
+                                  impl=cfg.impl, factors=factors), None)
     if server_opt == "none":
         return (aggregate_average(params, ks_all, weights, eps,
                                   impl=cfg.impl), None)
@@ -290,10 +331,13 @@ def _server_round(params: qnn.Params, smom, dataset: QuantumDataset,
                   server_opt: str = "none"):
     k_sel, k_node, k_noise = jax.random.split(key, 3)
     sel, _, weights = _select_impl(dataset, k_sel, cfg)
-    ks_all = _local_impl(params, dataset, sel, k_node, eta, eps, cfg, mesh)
+    reuse = _factors_survive_wire(cfg)
+    out = _local_impl(params, dataset, sel, k_node, eta, eps, cfg, mesh,
+                      with_factors=reuse)
+    ks_all, factors = out if reuse else (out, None)
     ks_all = _transmit_impl(ks_all, k_noise, cfg)
     return _aggregate_impl(params, smom, ks_all, weights, eps,
-                           server_beta, cfg, server_opt)
+                           server_beta, cfg, server_opt, factors=factors)
 
 
 def _resolve_fanout(cfg: QuantumFedConfig) -> str:
@@ -433,10 +477,11 @@ def lower_server_round(params: qnn.Params, dataset: QuantumDataset,
 def evaluate(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
              widths: Tuple[int, ...], impl: str = "xla",
              weights: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
-    """Mean fidelity / MSE; `weights` masks out padded invalid pairs."""
-    rho_out = qnn.outputs(params, phi_in, widths)
+    """Mean fidelity / MSE; `weights` masks out padded invalid pairs.
+    Both metrics honor ``impl`` (fidelity AND mse Pallas kernels)."""
+    rho_out = qnn.outputs(params, phi_in, widths, impl=impl)
     fid = qnn.batched_fidelity(phi_out, rho_out, impl=impl)
-    mse = ql.mse_state(phi_out, rho_out)
+    mse = qnn.batched_mse(phi_out, rho_out, impl=impl)
     if weights is None:
         return {"fidelity": jnp.mean(fid), "mse": jnp.mean(mse)}
     w = weights.astype(fid.dtype)

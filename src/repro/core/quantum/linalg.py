@@ -43,6 +43,14 @@ def dim(n_qubits: int) -> int:
     return 2 ** n_qubits
 
 
+def real_dtype(dtype) -> jnp.dtype:
+    """The real dtype underlying a complex (or real) dtype — float64 for
+    complex128 when x64 is enabled, float32 for complex64. Used to keep
+    real-valued weights/denominators in the precision of the quantum
+    state instead of hard-casting to float32."""
+    return jnp.finfo(dtype).dtype
+
+
 def dagger(a: jax.Array) -> jax.Array:
     """Conjugate transpose on the last two axes."""
     return jnp.conjugate(jnp.swapaxes(a, -1, -2))
@@ -182,6 +190,41 @@ def partial_trace(rho: jax.Array, keep: Sequence[int], n_qubits: int) -> jax.Arr
     return out
 
 
+def ensemble_compress(v: jax.Array) -> jax.Array:
+    """Replace an ensemble v: (..., E, d) by an equivalent one with
+    min(E, d) vectors, preserving the density exactly.
+
+    rho = sum_e v_e v_e† has rank <= d, so any ensemble with E > d
+    vectors is redundant. Stacking the vectors as rows V (E, d) and
+    QR-factoring V = Q R, the rows of R satisfy
+
+        rho[a, b] = (Vᵀ V*)[a, b] = conj(R† R)[a, b]
+                  = sum_g R[g, a] conj(R[g, b])
+
+    i.e. R's min(E, d) rows are an ensemble for the SAME density. QR is
+    backward-stable (reconstruction error ~ machine eps), so the
+    <= 1e-10 dense-oracle parity budget is untouched under x64.
+    """
+    return jnp.linalg.qr(v, mode="r")
+
+
+def ensemble_keep_major(v: jax.Array, keep: Sequence[int], n_qubits: int
+                        ) -> jax.Array:
+    """Reshape ensemble vectors (..., 2**n) to (..., d_keep, d_rest) with
+    the `keep` qubits (in the given order) as the row-major leading
+    factor. The layout the batched ensemble commutator trace contracts:
+    the kept axes become the rows/columns of the partial trace and the
+    rest axes are summed."""
+    keep = list(keep)
+    rest = [q for q in range(n_qubits) if q not in keep]
+    batch = v.shape[:-1]
+    nb = len(batch)
+    t = v.reshape(batch + _qubit_axes(n_qubits))
+    t = jnp.transpose(t, tuple(range(nb)) + tuple(nb + q for q in keep)
+                      + tuple(nb + q for q in rest))
+    return t.reshape(batch + (dim(len(keep)), dim(len(rest))))
+
+
 def ensemble_trace_product(v: jax.Array, w: jax.Array, keep: Sequence[int],
                            n_qubits: int) -> jax.Array:
     """Partially-traced rank-1 sum: T = tr_rest( sum_e |v_e><conj(w_e)| ).
@@ -243,6 +286,21 @@ def haar_unitary(key: jax.Array, d: int, batch: tuple = (),
     return q * ph[..., None, :]
 
 
+def eigh_herm(k: jax.Array):
+    """Eigendecomposition (lam, v) of Hermitian K — the expensive half of
+    ``expm_herm``, exposed so ONE factorization can serve several
+    exponentials of the same K (e.g. the temporary-update scale eps and
+    the upload scale eps*w_n within one federated round: e^{i s (wK)} =
+    V e^{i s w lam} V†, same eigenvectors)."""
+    return jnp.linalg.eigh(k)
+
+
+def expm_eigh(lam: jax.Array, v: jax.Array, scale) -> jax.Array:
+    """e^{i * scale * K} from a cached (lam, v) = eigh(K) factorization."""
+    phase = jnp.exp(1j * scale * lam.astype(v.dtype))
+    return jnp.einsum("...ab,...b,...cb->...ac", v, phase, jnp.conjugate(v))
+
+
 def expm_herm(k: jax.Array, scale) -> jax.Array:
     """e^{i * scale * K} for Hermitian K via eigendecomposition.
 
@@ -250,9 +308,8 @@ def expm_herm(k: jax.Array, scale) -> jax.Array:
     differentiate through it — Prop. 1 gives closed-form updates) and is
     more robust than Padé expm for complex Hermitian inputs.
     """
-    w, v = jnp.linalg.eigh(k)
-    phase = jnp.exp(1j * scale * w.astype(k.dtype))
-    return jnp.einsum("...ab,...b,...cb->...ac", v, phase, jnp.conjugate(v))
+    w, v = eigh_herm(k)
+    return expm_eigh(w, v, scale)
 
 
 def fidelity_pure(phi: jax.Array, rho: jax.Array) -> jax.Array:

@@ -12,17 +12,33 @@ channel is
 Parameters are a list (one per layer) of stacked unitaries with shape
 ``(m_l, 2**(m_{l-1}+1), 2**(m_{l-1}+1))``.
 
-Engine convention: the default ``engine="local"`` path never embeds a
-perceptron into the full 2**(m_in+m_out) layer space — each U^{l,j} is
-contracted directly on its acting qubit axes
-(``linalg.apply_unitary_local``), turning every dense D x D sandwich
-(D = 2**(m_in+m_out)) into a D x 2**(m_in+1) tensor contraction.
-``engine="dense"`` routes to the seed full-space reference
-(``dense_ref``) kept for equivalence tests and benchmarks. Orthogonally,
-``impl`` selects the backend for the remaining genuinely-dense inner
-products (Prop.-1 commutators, update application, fidelity):
-``"xla"`` (default, einsum) or ``"pallas"`` (the TPU kernels in
-``repro.kernels``; interpret mode on CPU).
+Engine convention: the default ``engine="local"`` path never touches
+operator space in the Prop.-1 hot loop — BOTH chains are rank-bounded
+state-vector ensembles:
+
+* forward (A side): inputs are pure, so rho^{l-1} = sum_e v_e v_e† is
+  an ensemble of at most 2**m_{l-1} vectors
+  (``feedforward_ensemble`` + QR compression, see
+  ``linalg.ensemble_compress``);
+* backward (B side): sigma^L = |phi_out><phi_out| is rank-1 per
+  example, so every B_j = U† ... (I ⊗ sigma^l) ... U factors into an
+  ensemble of at most ``d_in * rank(sigma^l) <= 2**(m_{l-1}+m_l)``
+  vectors (``backward_ensemble``). Each U† peel is a
+  ``linalg.apply_unitary_vec`` D-vector contraction instead of the old
+  D x D x 2**(m_in+1) operator sandwich, and sigma^{l-1} is read off the
+  fully-peeled ensemble — no operator-space adjoint pass exists anymore.
+
+The per-perceptron commutator traces T_j = tr_rest(A_j B_j) for all
+j of a layer are contracted in ONE batched ensemble-vs-ensemble call
+(an (N·E_A) x (N·E_B) inner-product Gram routed through
+``bmm``/``kernels.ops.complex_matmul``), not a Python loop of separate
+contractions. ``engine="local_opb"`` keeps the previous local engine
+(vector A chain, operator-space B chain) as the benchmark baseline, and
+``engine="dense"`` the seed full-space reference (``dense_ref``) as the
+equivalence oracle. Orthogonally, ``impl`` selects the backend for the
+dense inner products: ``"xla"`` (default, einsum) or ``"pallas"`` (the
+TPU kernels in ``repro.kernels`` — including the fused
+ensemble-commutator-trace kernel; interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -31,6 +47,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.quantum import dense_ref
 from repro.core.quantum import linalg as ql
@@ -71,6 +88,17 @@ def batched_fidelity(phi: jax.Array, rho: jax.Array, *, impl: str = "xla"
     batch = phi.shape[:-1]
     out = kops.fidelity(phi.reshape((-1,) + phi.shape[-1:]),
                         rho.reshape((-1,) + rho.shape[-2:]), impl=impl)
+    return out.reshape(batch)
+
+
+def batched_mse(phi: jax.Array, rho: jax.Array, *, impl: str = "xla"
+                ) -> jax.Array:
+    """|| rho - |phi><phi| ||_F^2 with kernel dispatch (Eq. 10 term)."""
+    if impl == "xla":
+        return ql.mse_state(phi, rho)
+    batch = phi.shape[:-1]
+    out = kops.mse(phi.reshape((-1,) + phi.shape[-1:]),
+                   rho.reshape((-1,) + rho.shape[-2:]), impl=impl)
     return out.reshape(batch)
 
 
@@ -149,21 +177,32 @@ def _append_ancilla(v: jax.Array, m_out: int) -> jax.Array:
 
 
 def feedforward_ensemble(params: Params, phi_in: jax.Array,
-                         widths: Sequence[int]) -> List[jax.Array]:
+                         widths: Sequence[int], *, compress: bool = False
+                         ) -> List[jax.Array]:
     """Propagate pure inputs as unnormalized state-vector ensembles.
 
     Returns [v^0, ..., v^L] with v^l of shape (..., E_l, 2**m_l) and
-    rho^l = sum_e v^l_e v^l_e†, E_l = 2**(m_0+...+m_{l-1}). Each layer
-    appends the |0..0> ancilla, applies the perceptron unitaries to the
-    VECTORS (local contractions on a 2**n-vector instead of a
-    2**n x 2**n operator), and folds the traced-out input factor into
-    the ensemble axis — the partial trace costs nothing.
+    rho^l = sum_e v^l_e v^l_e†. Each layer appends the |0..0> ancilla,
+    applies the perceptron unitaries to the VECTORS (local contractions
+    on a 2**n-vector instead of a 2**n x 2**n operator), and folds the
+    traced-out input factor into the ensemble axis — the partial trace
+    costs nothing.
+
+    compress=False keeps the raw fold, E_l = 2**(m_0+...+m_{l-1}).
+    compress=True QR-compresses each ensemble to its rank bound
+    (E_l <= 2**m_l, exact to machine eps — ``linalg.ensemble_compress``)
+    so deep networks don't pay a multiplicative ensemble blow-up; the
+    Prop.-1 update and the eval fast path run compressed.
     """
     vs = [phi_in[..., None, :]]  # E_0 = 1
     for l in range(1, len(widths)):
         m_in, m_out = widths[l - 1], widths[l]
         n = m_in + m_out
-        w = _append_ancilla(vs[-1], m_out)
+        v = vs[-1]
+        if compress and v.shape[-2] > v.shape[-1]:
+            v = ql.ensemble_compress(v)
+            vs[-1] = v
+        w = _append_ancilla(v, m_out)
         for j in range(m_out):
             w = ql.apply_unitary_vec(w, params[l - 1][j], _acting(m_in, j), n)
         # tr_in: ensemble over the input factor.
@@ -172,9 +211,173 @@ def feedforward_ensemble(params: Params, phi_in: jax.Array,
     return vs
 
 
-def density_from_ensemble(v: jax.Array) -> jax.Array:
+def _b_ensemble_chain(us: jax.Array, sv: jax.Array, m_in: int, m_out: int
+                      ) -> List[jax.Array]:
+    """One layer of the explicit ensemble B chain (the GEMM-shaped form
+    the fused Pallas kernel consumes).
+
+    sv: (..., R, d_out) ensemble of sigma^l (sigma^l = sum_f sv_f sv_f†).
+    Builds B_{m_out} = I_in ⊗ sigma^l as the ensemble {e_i ⊗ s_f} of
+    d_in * R' vectors (R' = min(R, d_out) after QR compression) and
+    peels the U† downward with VECTOR contractions:
+
+        B_j = U_{j+1}† ... U_m† (I ⊗ sigma) U_m ... U_{j+1}
+            = sum_k |c_k><c_k|,   c_k = U_{j+1}† ... U_m† (e_i ⊗ s_f)
+
+    Returns bvs with bvs[j] the B_{j+1} ensemble (0-based, shape
+    (..., d_in*R', 2**n)).
+    """
+    n = m_in + m_out
+    d_in, d_out = ql.dim(m_in), ql.dim(m_out)
+    if sv.shape[-2] > sv.shape[-1]:
+        sv = ql.ensemble_compress(sv)
+    eye_in = jnp.eye(d_in, dtype=sv.dtype)
+    bv = jnp.einsum("ij,...fo->...ifjo", eye_in, sv)
+    bv = bv.reshape(sv.shape[:-2] + (d_in * sv.shape[-2], d_in * d_out))
+    bvs = [bv]  # index: bvs[0] corresponds to j = m_out
+    for jj in range(m_out - 1, 0, -1):
+        bv = ql.apply_unitary_vec(bv, ql.dagger(us[jj]),
+                                  _acting(m_in, jj), n)
+        bvs.append(bv)
+    return bvs[::-1]  # bvs[j-1] is B_j
+
+
+def _layer_basis_response(us: jax.Array, m_in: int, m_out: int,
+                          dtype) -> jax.Array:
+    """psi_b = U_m ... U_1 (e_b ⊗ |0..0>) for every input basis vector:
+    (d_in, 2**n), example-INDEPENDENT — the layer unitary's ancilla-0
+    columns, built with m_out vector peels on a d_in batch."""
+    d_in = ql.dim(m_in)
+    n = m_in + m_out
+    psi = _append_ancilla(jnp.eye(d_in, dtype=dtype), m_out)
+    for j in range(m_out):
+        psi = ql.apply_unitary_vec(psi, us[j], _acting(m_in, j), n)
+    return psi
+
+
+def _sigma_step_ensemble(us: jax.Array, sv: jax.Array, m_in: int,
+                         m_out: int) -> jax.Array:
+    """sigma^{l-1} ensemble from the sigma^l ensemble, via the basis
+    response — never materializing a d_in-expanded B ensemble:
+
+        sigma^{l-1}[a, b] = psi_a† (I ⊗ sigma^l) psi_b
+                          = sum_{g,i} conj(c[g,a,i]) c[g,b,i],
+        c[g,b,i] = sum_o conj(s_g[o]) psi_b[(i,o)]
+
+    so {conj(c[g,:,i])} is a (R * d_in)-vector ensemble for sigma^{l-1},
+    QR-compressed back to <= d_in. Cost: m_out example-independent psi
+    peels + one small contraction — O(R d_in^2 d_out) per example
+    instead of the O(d_in R D 2**(m_in+1)) full-ensemble peel.
+    """
+    d_in, d_out = ql.dim(m_in), ql.dim(m_out)
+    if sv.shape[-2] > sv.shape[-1]:
+        sv = ql.ensemble_compress(sv)
+    psi = _layer_basis_response(us, m_in, m_out, sv.dtype)
+    psi_t = psi.reshape(d_in, d_in, d_out)  # (b, i, o)
+    c = jnp.einsum("...go,bio->...gib", jnp.conjugate(sv), psi_t)
+    sv_prev = jnp.conjugate(c).reshape(c.shape[:-3]
+                                       + (sv.shape[-2] * d_in, d_in))
+    if sv_prev.shape[-2] > d_in:
+        sv_prev = ql.ensemble_compress(sv_prev)
+    return sv_prev
+
+
+def backward_ensemble(params: Params, phi_out: jax.Array,
+                      widths: Sequence[int]) -> List[jax.Array]:
+    """Back-propagate pure labels as state-vector ensembles.
+
+    The mirror of ``feedforward_ensemble``: returns [w^0, ..., w^L] with
+    w^l of shape (..., R_l, 2**m_l) and sigma^l = sum_f w^l_f w^l_f†
+    (QR-compressed, so R_l <= 2**m_l — the low-rank bound the ensemble-B
+    engine exploits). Gated against the operator-space ``layer_adjoint``
+    in the engine-equivalence suite.
+    """
+    L = len(widths) - 1
+    svs = [phi_out[..., None, :]]
+    for l in range(L, 0, -1):
+        svs.append(_sigma_step_ensemble(params[l - 1], svs[-1],
+                                        widths[l - 1], widths[l]))
+    return svs[::-1]
+
+
+def density_from_ensemble(v: jax.Array, *, impl: str = "xla") -> jax.Array:
     """rho = sum_e v_e v_e† for ensembles v: (..., E, d)."""
-    return jnp.einsum("...ed,...ec->...dc", v, jnp.conjugate(v))
+    if impl == "xla":
+        return jnp.einsum("...ed,...ec->...dc", v, jnp.conjugate(v))
+    return bmm(jnp.swapaxes(v, -1, -2), jnp.conjugate(v), impl=impl)
+
+
+def ensemble_commutator_traces(a_states: jax.Array, b_states: jax.Array,
+                               m_in: int, m_out: int, *,
+                               impl: str = "xla") -> jax.Array:
+    """T_j = sum_x tr_rest(A_{j,x} B_{j,x}) for ALL perceptrons at once.
+
+    a_states: (m_out, ..., E_A, 2**n), b_states: (m_out, ..., E_B, 2**n)
+    complex ensembles in NATURAL vector layout, entry j holding the
+    states of perceptron j's trace (acting qubits = inputs + out qubit
+    j); ``...`` is the example batch. Returns (m_out, dk, dk) with
+    dk = 2**(m_in+1). With A = sum_e a a†, B = sum_f b b†:
+
+        T[α, β] = sum_{e,f} <a_e|b_f> * sum_r a_e[(α,r)] conj(b_f[(β,r)])
+
+    — the (N·E_A) x (N·E_B) Gram of cross inner products, then the
+    LARGER ensemble is folded down through the Gram onto the smaller
+    one (tr_rest(AB) = tr_rest(BA)†, so the orientation is free), so
+    both the final keep-axis contraction and every layout permute touch
+    only min(E_A, E_B)-sized ensembles. One batched einsum chain per
+    layer — not a per-j Python loop of D x D products — routed through
+    ``bmm``/``kernels.ops.complex_matmul``-equivalent batched matmuls;
+    impl="pallas" instead dispatches the fused ensemble-commutator-trace
+    Pallas kernel (Gram + fold + trace in one VMEM-resident cell per
+    (j, example)).
+    """
+    n = m_in + m_out
+    a4 = a_states.reshape((m_out, -1) + a_states.shape[-2:])
+    b4 = b_states.reshape((m_out, -1) + b_states.shape[-2:])
+    ea, eb = a4.shape[2], b4.shape[2]
+
+    if impl == "pallas":
+        def km(x):   # keep-major stack: (J, NB, E, dk, dr)
+            return jnp.stack(
+                [ql.ensemble_keep_major(x[j], _acting(m_in, j), n)
+                 for j in range(m_out)])
+        if ea < eb:  # kernel folds through its SECOND argument
+            return ql.dagger(kops.ensemble_commutator_trace(
+                km(b4), km(a4), impl=impl))
+        return kops.ensemble_commutator_trace(km(a4), km(b4), impl=impl)
+
+    g = jnp.einsum("jnex,jnfx->jnef", jnp.conjugate(a4), b4)
+    if ea <= eb:
+        # fold B through the Gram onto A's ensemble: z_e = sum_f G*_ef b_f,
+        # T = sum_e tr_rest(|a_e><z_e|)
+        x = a4
+        y = jnp.einsum("jnef,jnfx->jnex", jnp.conjugate(g), b4)
+    else:
+        # fold A onto B's ensemble: w_f = sum_e G_ef a_e,
+        # T = sum_f tr_rest(|w_f><b_f|)
+        x = jnp.einsum("jnef,jnex->jnfx", g, a4)
+        y = b4
+    xk = jnp.stack([ql.ensemble_keep_major(x[j], _acting(m_in, j), n)
+                    for j in range(m_out)])
+    yk = jnp.stack([ql.ensemble_keep_major(y[j], _acting(m_in, j), n)
+                    for j in range(m_out)])
+    return jnp.einsum("jnear,jnebr->jab", xk, jnp.conjugate(yk))
+
+
+def _weighted_label_ensemble(phi_out: jax.Array,
+                             weights: Optional[jax.Array]):
+    """(sigma^L ensemble, denom) honoring x64: weights stay in the real
+    dtype of the state (float64 under x64), never hard-cast to float32.
+    The Prop.-1 weighted average sum_x w_x M_x / sum_x w_x is realized by
+    scaling the label VECTORS by sqrt(w_x) (sigma is quadratic in them).
+    """
+    sv = phi_out[..., None, :]
+    if weights is None:
+        return sv, phi_out.shape[-2]
+    w = weights.astype(ql.real_dtype(sv.dtype))
+    sv = sv * jnp.sqrt(w)[..., None, None].astype(sv.dtype)
+    denom = jnp.maximum(jnp.sum(w), jnp.asarray(1e-12, w.dtype))
+    return sv, denom
 
 
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
@@ -189,15 +392,20 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     where A is the partially-applied forward state and B the partially
     back-propagated label, both in the (m_{l-1}+m_l)-qubit layer space.
 
-    The local engine exploits the problem structure instead of forming
-    full-space products: A = sum_e v_e v_e† stays an ensemble of
-    vectors (inputs are pure, so rank(rho^{l-1}) <= 2**m_{l-1}), the
-    B_j are peeled with local contractions, sigma^{l-1} is read off the
-    fully-peeled B chain (no separate adjoint pass), and since A and B
-    are Hermitian the commutator trace is tr_rest[A,B] = T - T† with
-    T = tr_rest(A B_j) contracted directly from v, v†B_j
-    (``linalg.ensemble_trace_product``). The v†B_j products are the one
-    dense step left and go through ``bmm``/``impl``.
+    The local engine never materializes either side as an operator:
+    A = sum_e a_e a_e† and B = sum_f b_f b_f† are BOTH rank-bounded
+    vector ensembles (inputs and labels are pure), every U/U† peel is a
+    vector contraction, sigma^{l-1} is read off the fully-peeled B
+    ensemble (no separate adjoint pass), and since A and B are Hermitian
+    the commutator trace is tr_rest[A, B] = T - T† with
+    T = tr_rest(A B_j) contracted ensemble-vs-ensemble for all
+    perceptrons of a layer in one batched call
+    (``ensemble_commutator_traces`` — the one dense step left, routed
+    through ``bmm``/``impl`` or the fused Pallas kernel).
+
+    engine="local_opb" is the previous local path (operator-space B
+    peels), kept as the benchmark baseline; engine="dense" the seed
+    full-space oracle.
 
     phi_in:  (N, 2**m_0) pure input states
     phi_out: (N, 2**m_L) pure label states
@@ -205,25 +413,109 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     masks for padded unequal-size node batches). The Prop.-1 average
     becomes sum_x w_x tr_rest M_x / sum_x w_x — exact GD over the
     weighted multiset; zero-weight (padding) examples drop out entirely.
-    Implemented by scaling the label density sigma^L (M is bilinear in
-    the forward A and backward B chains, B linear in sigma), so both
-    engines weight identically.
+    Implemented by scaling the label ensemble by sqrt(w_x) (M is
+    bilinear in the forward A and backward B chains, sigma quadratic in
+    the label vectors), so all engines weight identically — in the
+    state's real dtype (float64 under x64), not a float32 hard-cast.
     Returns a list like params of stacked K's (m_l, d, d).
     """
     if engine == "dense":
         return dense_ref.update_matrices(params, phi_in, phi_out, widths,
                                          eta, weights=weights)
+    if engine == "local_opb":
+        return _update_matrices_opb(params, phi_in, phi_out, widths, eta,
+                                    impl=impl, weights=weights)
     if engine != "local":
         raise ValueError(f"unknown engine {engine!r}")
 
+    vs = feedforward_ensemble(params, phi_in, widths, compress=True)
+    sv, denom = _weighted_label_ensemble(phi_out, weights)
+
+    ks_rev: Params = []
+    for l in range(len(widths) - 1, 0, -1):
+        us = params[l - 1]
+        m_in, m_out = widths[l - 1], widths[l]
+        n = m_in + m_out
+        if sv.shape[-2] > sv.shape[-1]:
+            sv = ql.ensemble_compress(sv)
+
+        # A chain as ensemble vectors: A_j = sum_e |a_e,j><a_e,j| with
+        # a_j = U_j ... U_1 (v^{l-1} ⊗ |0..0>); the per-perceptron
+        # state stacks feed ONE batched trace contraction per layer.
+        av = _append_ancilla(vs[l - 1], m_out)
+        a_chain = []
+        for j in range(m_out):
+            av = ql.apply_unitary_vec(av, us[j], _acting(m_in, j), n)
+            a_chain.append(av)
+
+        if impl == "pallas":
+            # explicit B ensembles: GEMM-shaped Gram + fold + trace in
+            # the fused ensemble-commutator-trace kernel (MXU food)
+            t = ensemble_commutator_traces(
+                jnp.stack(a_chain), jnp.stack(_b_ensemble_chain(
+                    us, sv, m_in, m_out)), m_in, m_out, impl=impl)
+        else:
+            # adjoint-applied form: y^{(j)}_e = B_j a^{(j)}_e via the
+            # recursion y^{(j)} = U_{j+1}† y^{(j+1)}, seeded by
+            # y^{(m)} = (I ⊗ sigma^l) a^{(m)} — the B side costs
+            # m_out-1 vector peels on the SMALL A ensemble and no
+            # d_in-expanded ensemble ever exists.
+            sigma_op = density_from_ensemble(sv)
+            d_in, d_out = ql.dim(m_in), ql.dim(m_out)
+            a_top = a_chain[-1].reshape(a_chain[-1].shape[:-1]
+                                        + (d_in, d_out))
+            y = jnp.einsum("...op,...eip->...eio", sigma_op, a_top)
+            y = y.reshape(a_chain[-1].shape)
+            y_chain = [y]
+            for jj in range(m_out - 1, 0, -1):
+                y = ql.apply_unitary_vec(y, ql.dagger(us[jj]),
+                                         _acting(m_in, jj), n)
+                y_chain.append(y)
+            y_chain = y_chain[::-1]  # y_chain[j] pairs with a_chain[j]
+            t = _ensemble_pair_traces(a_chain, y_chain, m_in, m_out)
+
+        ks_rev.append((eta * (2.0 ** m_in) * 1j / denom)
+                      * (t - ql.dagger(t)))
+        if l > 1:
+            sv = _sigma_step_ensemble(us, sv, m_in, m_out)
+    return ks_rev[::-1]
+
+
+def _ensemble_pair_traces(x_list: Sequence[jax.Array],
+                          y_list: Sequence[jax.Array], m_in: int,
+                          m_out: int) -> jax.Array:
+    """T_j = sum_{x-batch} tr_rest( sum_e |x_e><y_e| ) for all j at once:
+    keep-major folds of the paired per-perceptron states, then ONE
+    batched einsum over the j-stack (no per-j contraction loop)."""
+    n = m_in + m_out
+    xk = jnp.stack([ql.ensemble_keep_major(x, _acting(m_in, j), n)
+                    for j, x in enumerate(x_list)])
+    yk = jnp.stack([ql.ensemble_keep_major(y, _acting(m_in, j), n)
+                    for j, y in enumerate(y_list)])
+    xk = xk.reshape((m_out, -1) + xk.shape[-3:])
+    yk = yk.reshape((m_out, -1) + yk.shape[-3:])
+    return jnp.einsum("jnear,jnebr->jab", xk, jnp.conjugate(yk))
+
+
+def _update_matrices_opb(params: Params, phi_in: jax.Array,
+                         phi_out: jax.Array, widths: Sequence[int], eta, *,
+                         impl: str = "xla",
+                         weights: Optional[jax.Array] = None) -> Params:
+    """Previous local engine: vector A chain, OPERATOR-space B chain.
+
+    Kept as the ``engine="local_opb"`` benchmark baseline for the
+    ensemble-B rewrite (and as a third point in the equivalence suite):
+    B is peeled as a D x D operator with ``apply_unitary_local`` and
+    each perceptron's trace is a separate av† B_j product.
+    """
     vs = feedforward_ensemble(params, phi_in, widths)
     sigma = ql.pure_density(phi_out)  # sigma^L, updated as we descend
     if weights is None:
         denom = phi_in.shape[0]
     else:
-        w = weights.astype(jnp.float32)
+        w = weights.astype(ql.real_dtype(sigma.dtype))
         sigma = sigma * w[:, None, None].astype(sigma.dtype)
-        denom = jnp.maximum(jnp.sum(w), 1e-12).astype(jnp.float32)
+        denom = jnp.maximum(jnp.sum(w), jnp.asarray(1e-12, w.dtype))
 
     ks_rev: Params = []
     for l in range(len(widths) - 1, 0, -1):
@@ -244,8 +536,6 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
             bs.append(b)
         bs = bs[::-1]  # bs[j-1] is B_j
 
-        # A chain as ensemble vectors: A_j = sum_e |a_e,j><a_e,j| with
-        # a_j = U_j ... U_1 (v^{l-1} ⊗ |0..0>).
         av = _append_ancilla(vs[l - 1], m_out)  # (N, E, 2**n)
         layer_ks = []
         for j in range(m_out):
@@ -266,46 +556,118 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     return ks_rev[::-1]
 
 
+def _dim_groups(arrs: Sequence[jax.Array]):
+    """Group per-layer stacked arrays (..., m_l, d, d) by identical
+    (leading batch, d) so same-dimension layers batch into ONE eigh /
+    matmul; yields (indices, per-layer m sizes)."""
+    groups = {}
+    for i, a in enumerate(arrs):
+        groups.setdefault((a.shape[:-3], a.shape[-1]), []).append(i)
+    for idxs in groups.values():
+        yield idxs, [arrs[i].shape[-3] for i in idxs]
+
+
+def _grouped_layer_map(fn, arrs: Sequence[jax.Array],
+                       extras: Optional[Sequence] = None) -> list:
+    """fn over per-layer stacks, concatenated across same-dim layers.
+
+    fn(stacked, extra_stacked_or_None) -> stacked result with the same
+    perceptron axis at -3 (e.g. expm_herm, bmm against params). One call
+    per dimension group instead of one per layer.
+    """
+    out = [None] * len(arrs)
+    for idxs, sizes in _dim_groups(arrs):
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = fn(arrs[i], None if extras is None else extras[i])
+            continue
+        cat = jnp.concatenate([arrs[i] for i in idxs], axis=-3)
+        ecat = (None if extras is None else
+                jnp.concatenate([extras[i] for i in idxs], axis=-3))
+        res = fn(cat, ecat)
+        for i, piece in zip(idxs, jnp.split(res, np.cumsum(sizes)[:-1],
+                                            axis=-3)):
+            out[i] = piece
+    return out
+
+
 def apply_updates(params: Params, ks: Params, eps, *, impl: str = "xla"
                   ) -> Params:
-    """Temporary update step: U^{l,j} <- e^{i eps K_j^l} U^{l,j}."""
-    new_params = []
-    for us, k in zip(params, ks):
-        upd = ql.expm_herm(k, eps)
-        new_params.append(bmm(upd, us, impl=impl))
-    return new_params
+    """Temporary update step: U^{l,j} <- e^{i eps K_j^l} U^{l,j}.
+
+    Layers sharing a perceptron dimension are batched: their K stacks
+    concatenate into ONE ``expm_herm`` (one eigh) and ONE ``bmm`` per
+    dimension group instead of a per-layer Python loop.
+    """
+    return _grouped_layer_map(
+        lambda k, us: bmm(ql.expm_herm(k, eps), us, impl=impl), ks,
+        extras=params)
+
+
+def eigh_updates(ks: Params) -> List[Tuple[jax.Array, jax.Array]]:
+    """Per-layer eigh factors (lam, v) of the stacked update matrices,
+    one batched eigh per dimension group. The factors serve every
+    exponentiation of the same K within a round — the temporary-update
+    scale eps AND the upload scale eps*w_n (e^{i s (wK)} = V e^{i s w
+    lam} V†) — so the round pays eigh once per K."""
+    factored = [None] * len(ks)
+    for idxs, sizes in _dim_groups(ks):
+        if len(idxs) == 1:
+            i = idxs[0]
+            factored[i] = ql.eigh_herm(ks[i])
+            continue
+        lam, v = ql.eigh_herm(
+            jnp.concatenate([ks[i] for i in idxs], axis=-3))
+        splits = np.cumsum(sizes)[:-1]
+        for i, lp, vp in zip(idxs, jnp.split(lam, splits, axis=-2),
+                             jnp.split(v, splits, axis=-3)):
+            factored[i] = (lp, vp)
+    return factored
+
+
+def apply_updates_eigh(params: Params,
+                       factors: Sequence[Tuple[jax.Array, jax.Array]],
+                       eps, *, impl: str = "xla") -> Params:
+    """``apply_updates`` from cached ``eigh_updates`` factors (no eigh)."""
+    return [bmm(ql.expm_eigh(lam, v, eps), us, impl=impl)
+            for (lam, v), us in zip(factors, params)]
 
 
 def update_unitaries(ks: Params, scale) -> Params:
-    """The unitaries a node uploads: U_{n,k}^{l,j} = e^{i eps (N_n/N_t) K}."""
-    return [ql.expm_herm(k, scale) for k in ks]
+    """The unitaries a node uploads: U_{n,k}^{l,j} = e^{i eps (N_n/N_t) K}
+    (batched across same-dimension layers)."""
+    return _grouped_layer_map(lambda k, _: ql.expm_herm(k, scale), ks)
 
 
 def apply_unitary_updates(params: Params, updates: Params, *,
                           impl: str = "xla") -> Params:
-    """Left-multiply stacked per-perceptron unitaries onto the params."""
-    return [bmm(u, p, impl=impl) for u, p in zip(updates, params)]
+    """Left-multiply stacked per-perceptron unitaries onto the params
+    (one batched matmul per dimension group)."""
+    return _grouped_layer_map(
+        lambda u, p: bmm(u, p, impl=impl), updates, extras=params)
 
 
-def outputs(params: Params, phi_in: jax.Array, widths: Sequence[int]
-            ) -> jax.Array:
+def outputs(params: Params, phi_in: jax.Array, widths: Sequence[int], *,
+            impl: str = "xla") -> jax.Array:
     """rho^out for a batch of pure input states (ensemble fast path)."""
     return density_from_ensemble(
-        feedforward_ensemble(params, phi_in, widths)[-1])
+        feedforward_ensemble(params, phi_in, widths, compress=True)[-1],
+        impl=impl)
 
 
 def cost_fidelity(params: Params, phi_in: jax.Array, phi_out: jax.Array,
                   widths: Sequence[int], *, impl: str = "xla") -> jax.Array:
     """Eq. 3: mean fidelity <phi_out| rho_out |phi_out> over the batch."""
-    rho_out = outputs(params, phi_in, widths)
+    rho_out = outputs(params, phi_in, widths, impl=impl)
     return jnp.mean(batched_fidelity(phi_out, rho_out, impl=impl))
 
 
 def cost_mse(params: Params, phi_in: jax.Array, phi_out: jax.Array,
-             widths: Sequence[int]) -> jax.Array:
-    """Eq. 10: mean squared (Frobenius) error."""
-    rho_out = outputs(params, phi_in, widths)
-    return jnp.mean(ql.mse_state(phi_out, rho_out))
+             widths: Sequence[int], *, impl: str = "xla") -> jax.Array:
+    """Eq. 10: mean squared (Frobenius) error (impl-dispatched like
+    ``cost_fidelity`` — the Pallas backend serves BOTH eval costs)."""
+    rho_out = outputs(params, phi_in, widths, impl=impl)
+    return jnp.mean(batched_mse(phi_out, rho_out, impl=impl))
 
 
 @functools.partial(jax.jit, static_argnames=("widths", "engine", "impl"))

@@ -1,10 +1,16 @@
-"""Pallas TPU kernel: batched pure-state fidelity <phi| rho |phi>
-(Eq. 3's inner loop over the evaluation set).
+"""Pallas TPU kernels: batched pure-state fidelity <phi| rho |phi>
+(Eq. 3's inner loop over the evaluation set) and the Frobenius MSE
+|| rho - |phi><phi| ||_F^2 (Eq. 10's per-pair term).
 
 One grid step evaluates a block of states: quadratic form via two MXU
 matmuls on the real/imag split (rho Hermitian => result real):
 
   Re<phi|rho|phi> = phr^T (Rr phr - Ri phi_i) + phi_i^T (Rr phi_i + Ri phr)
+
+The MSE kernel forms the rank-1 projector in VMEM and reduces the
+squared residual in the same pass, so the Eq.-10 eval path costs one
+kernel launch per block instead of a dense projector materialization in
+HBM.
 """
 from __future__ import annotations
 
@@ -25,9 +31,21 @@ def _fidelity_kernel(pr_ref, pi_ref, rr_ref, ri_ref, o_ref):
                   + jnp.sum(pi * yi, axis=-1)).astype(o_ref.dtype)
 
 
-def fidelity_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
-                   interpret: bool = False) -> jax.Array:
-    """phi: (N, d) complex; rho: (N, d, d) complex. Returns (N,) real."""
+def _mse_kernel(pr_ref, pi_ref, rr_ref, ri_ref, o_ref):
+    pr = pr_ref[...].astype(jnp.float32)      # (blk, d)
+    pi = pi_ref[...].astype(jnp.float32)
+    rr = rr_ref[...].astype(jnp.float32)      # (blk, d, d)
+    ri = ri_ref[...].astype(jnp.float32)
+    # projector P = |phi><phi|: Pr = pr prᵀ + pi piᵀ, Pi = pi prᵀ - pr piᵀ
+    proj_r = pr[:, :, None] * pr[:, None, :] + pi[:, :, None] * pi[:, None, :]
+    proj_i = pi[:, :, None] * pr[:, None, :] - pr[:, :, None] * pi[:, None, :]
+    dr = rr - proj_r
+    di = ri - proj_i
+    o_ref[...] = jnp.sum(dr * dr + di * di, axis=(-2, -1)).astype(o_ref.dtype)
+
+
+def _run_state_kernel(kernel, phi, rho, block, interpret):
+    """Shared grid/pad plumbing for the per-pair (phi, rho) kernels."""
     n, d = phi.shape
     p = (-n) % block
     pr, pi = jnp.real(phi), jnp.imag(phi)
@@ -39,7 +57,7 @@ def fidelity_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
         ri = jnp.pad(ri, ((0, p), (0, 0), (0, 0)))
     grid = ((n + p) // block,)
     out = pl.pallas_call(
-        _fidelity_kernel,
+        kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block, d), lambda i: (i, 0)),
@@ -52,3 +70,15 @@ def fidelity_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
         interpret=interpret,
     )(pr, pi, rr, ri)
     return out[:n]
+
+
+def fidelity_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """phi: (N, d) complex; rho: (N, d, d) complex. Returns (N,) real."""
+    return _run_state_kernel(_fidelity_kernel, phi, rho, block, interpret)
+
+
+def mse_batch(phi: jax.Array, rho: jax.Array, *, block: int = 8,
+              interpret: bool = False) -> jax.Array:
+    """|| rho - |phi><phi| ||_F^2: phi (N, d), rho (N, d, d) -> (N,) real."""
+    return _run_state_kernel(_mse_kernel, phi, rho, block, interpret)

@@ -12,10 +12,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.fidelity import fidelity_batch
+from repro.kernels.fidelity import fidelity_batch, mse_batch
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gla_chunked import gla_chunked
 from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.zgemm import ensemble_commutator_trace as _ect
 from repro.kernels.zgemm import zgemm
 
 
@@ -76,6 +77,37 @@ def fidelity(phi, rho, *, impl: str = "auto"):
     if use_pallas:
         return fidelity_batch(phi, rho, interpret=not _on_tpu())
     return ref.fidelity_ref(phi, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def mse(phi, rho, *, impl: str = "auto"):
+    """Batched Frobenius MSE ||rho - |phi><phi|||_F^2 -> (N,) real."""
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        return mse_batch(phi, rho, interpret=not _on_tpu())
+    return ref.mse_ref(phi, rho)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def ensemble_commutator_trace(a, b, *, impl: str = "auto"):
+    """T[j] = sum_n tr_rest(A_{j,n} B_{j,n}) for vector ensembles.
+
+    a: (J, N, Ea, dk, dr), b: (J, N, Eb, dk, dr) complex in keep-major
+    layout (``linalg.ensemble_keep_major``); A/B are the implied
+    sum-of-outer-product densities. Returns (J, dk, dk) complex. The
+    Pallas path fuses the cross Gram, re-expansion, and keep-axis trace
+    in VMEM per (j, n) cell (fp32 accumulation, interpret mode off-TPU);
+    the xla path is the working-dtype einsum reference.
+    """
+    use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    if use_pallas:
+        j, n, ea, dk, dr = a.shape
+        ar = a.reshape(j, n, ea, dk * dr)
+        br = b.reshape(j, n, b.shape[2], dk * dr)
+        tr, ti = _ect(jnp.real(ar), jnp.imag(ar), jnp.real(br),
+                      jnp.imag(br), d_keep=dk, interpret=not _on_tpu())
+        return (tr + 1j * ti).astype(a.dtype)
+    return ref.ensemble_commutator_trace_ref(a, b)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

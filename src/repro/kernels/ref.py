@@ -66,6 +66,32 @@ def fidelity_ref(phi, rho) -> jax.Array:
                                phi))
 
 
+def mse_ref(phi, rho) -> jax.Array:
+    """|| rho - |phi><phi| ||_F^2 batched (Eq. 10's per-pair term)."""
+    proj = phi[..., :, None] * jnp.conjugate(phi[..., None, :])
+    diff = rho - proj
+    return jnp.real(jnp.sum(jnp.abs(diff) ** 2, axis=(-2, -1)))
+
+
+def ensemble_commutator_trace_ref(a, b) -> jax.Array:
+    """Batched partially-traced ensemble product, working dtype.
+
+    a: (J, N, Ea, dk, dr); b: (J, N, Eb, dk, dr) complex ensembles in
+    keep-major layout (``linalg.ensemble_keep_major``). Returns
+    T: (J, dk, dk) with
+
+        T[j] = sum_n tr_rest( A_{j,n} B_{j,n} ),
+        A = sum_e a_e a_e†,  B = sum_f b_f b_f†,
+
+    computed ensemble-vs-ensemble: the (Ea x Eb) Gram of cross inner
+    products, re-expanded against the A states and traced against the B
+    states — never materializing a (dk*dr)^2 operator.
+    """
+    g = jnp.einsum("jnekr,jnfkr->jnef", jnp.conjugate(a), b)
+    w = jnp.einsum("jnef,jnekr->jnfkr", g, a)
+    return jnp.einsum("jnfar,jnfbr->jab", w, jnp.conjugate(b))
+
+
 def rglru_scan_ref(a, b) -> "jax.Array":
     """Sequential diagonal recurrence h_t = a_t h_{t-1} + b_t, fp32."""
     f32 = jnp.float32

@@ -99,3 +99,94 @@ def zgemm_complex(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
     cr, ci = zgemm(jnp.real(a), jnp.imag(a), jnp.real(b), jnp.imag(b),
                    **kw)
     return cr + 1j * ci
+
+
+def _ect_kernel(ar_ref, ai_ref, br_ref, bi_ref, tr_ref, ti_ref,
+                acc_r, acc_i, *, d_keep: int):
+    """Fused ensemble commutator trace for ONE (perceptron j, example n)
+    grid cell, accumulating over the example (minor) grid axis.
+
+    Refs carry keep-major ensembles flattened to (1, 1, E, K) with
+    K = d_keep * d_rest. Three chained real dot pairs per cell:
+
+        G = conj(A) Bᵀ          (Ea, Eb)  cross Gram
+        W = Gᵀ A                (Eb, K)   re-expanded against A
+        T += W~ conj(B~)ᵀ       (dk, dk)  keep-axis partial trace
+
+    where ~ folds (Eb, dk, dr) -> (dk, Eb*dr). Complex arithmetic is the
+    zgemm real/imag split; fp32 accumulators (gated at kernel tolerance,
+    not the engines' 1e-10 oracle budget).
+    """
+    nn = pl.program_id(1)
+    n_n = pl.num_programs(1)
+
+    @pl.when(nn == 0)
+    def _init():
+        acc_r[...] = jnp.zeros_like(acc_r)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    ar = ar_ref[0, 0].astype(jnp.float32)     # (Ea, K)
+    ai = ai_ref[0, 0].astype(jnp.float32)
+    br = br_ref[0, 0].astype(jnp.float32)     # (Eb, K)
+    bi = bi_ref[0, 0].astype(jnp.float32)
+    # contract the trailing K axis: (Ea, K) x (Eb, K) -> (Ea, Eb)
+    dot_k = functools.partial(jax.lax.dot_general,
+                              dimension_numbers=(((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    # contract the leading Ea axis: (Ea, Eb) x (Ea, K) -> (Eb, K)
+    dot_e = functools.partial(jax.lax.dot_general,
+                              dimension_numbers=(((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    # G = conj(A) Bᵀ
+    gr = dot_k(ar, br) + dot_k(ai, bi)
+    gi = dot_k(ar, bi) - dot_k(ai, br)
+    # W = Gᵀ A
+    wr = dot_e(gr, ar) - dot_e(gi, ai)
+    wi = dot_e(gr, ai) + dot_e(gi, ar)
+
+    eb = br.shape[0]
+    d_rest = br.shape[1] // d_keep
+
+    def fold(x):   # (Eb, dk*dr) -> (dk, Eb*dr): keep axis to the rows
+        return x.reshape(eb, d_keep, d_rest).transpose(1, 0, 2).reshape(
+            d_keep, eb * d_rest)
+
+    wr2, wi2 = fold(wr), fold(wi)
+    br2, bi2 = fold(br), fold(bi)
+    # T += W~ conj(B~)ᵀ over the folded (Eb*dr) axis
+    acc_r[...] += dot_k(wr2, br2) + dot_k(wi2, bi2)
+    acc_i[...] += dot_k(wi2, br2) - dot_k(wr2, bi2)
+
+    @pl.when(nn == n_n - 1)
+    def _done():
+        tr_ref[0] = acc_r[...].astype(tr_ref.dtype)
+        ti_ref[0] = acc_i[...].astype(ti_ref.dtype)
+
+
+def ensemble_commutator_trace(ar, ai, br, bi, *, d_keep: int,
+                              interpret: bool = False):
+    """Fused ensemble-vs-ensemble partial-trace product on split parts.
+
+    ar, ai: (J, N, Ea, K); br, bi: (J, N, Eb, K) float, K = d_keep*d_rest
+    in keep-major layout. Returns (tr, ti): (J, d_keep, d_keep) with
+    T[j] = sum_n tr_rest(A_{j,n} B_{j,n}) — the Prop.-1 commutator trace
+    input (K_j ~ T - T†), every D x D operator product replaced by three
+    ensemble-sized GEMMs fused in VMEM per grid cell.
+    """
+    j, n, ea, k = ar.shape
+    grid = (j, n)
+    spec_a = pl.BlockSpec((1, 1, ea, k), lambda jj, nn: (jj, nn, 0, 0))
+    spec_b = pl.BlockSpec((1, 1, br.shape[2], k),
+                          lambda jj, nn: (jj, nn, 0, 0))
+    out_spec = pl.BlockSpec((1, d_keep, d_keep), lambda jj, nn: (jj, 0, 0))
+    out_shape = [jax.ShapeDtypeStruct((j, d_keep, d_keep), ar.dtype)] * 2
+    tr, ti = pl.pallas_call(
+        functools.partial(_ect_kernel, d_keep=d_keep),
+        grid=grid,
+        in_specs=[spec_a, spec_a, spec_b, spec_b],
+        out_specs=[out_spec, out_spec],
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((d_keep, d_keep), jnp.float32)] * 2,
+        interpret=interpret,
+    )(ar, ai, br, bi)
+    return tr, ti

@@ -2,12 +2,16 @@
 
 Two independent axes are gated here:
 
-* engine: the local-contraction path (default) must reproduce the seed
-  dense full-space path (``dense_ref``) to <= 1e-10 under x64 for the
-  layer channel, its adjoint, the Prop.-1 update matrices, and a full
+* engine: the low-rank ensemble path (default ``"local"`` — vector
+  ensembles on BOTH Prop.-1 chains) and the previous local engine
+  (``"local_opb"``, operator-space B) must reproduce the seed dense
+  full-space path (``dense_ref``) to <= 1e-10 under x64 for the layer
+  channel, its adjoint (incl. the ensemble-B ``backward_ensemble``),
+  the Prop.-1 update matrices (weighted and unweighted), and a full
   federated server round — over randomized widths and seeds.
-* impl: ``"pallas"`` (zgemm / fidelity kernels, interpret mode on this
-  CPU container) must match ``"xla"`` wherever it is wired into the qnn
+* impl: ``"pallas"`` (zgemm / fidelity / mse / fused
+  ensemble-commutator-trace kernels, interpret mode on this CPU
+  container) must match ``"xla"`` wherever it is wired into the qnn
   path. The kernels accumulate in f32, so this gate is at kernel
   tolerance, not 1e-10.
 """
@@ -16,12 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypcompat import given, settings, st
+
 from repro.core.quantum import dense_ref
 from repro.core.quantum import federated as fed
 from repro.core.quantum import linalg as ql, qnn
 from repro.core.quantum import data as qdata
 
-WIDTH_CASES = [(2, 3, 2), (1, 2, 1), (3, 2, 3), (2, 2, 2, 2)]
+WIDTH_CASES = [(2, 3, 2), (1, 2, 1), (3, 2, 3), (2, 2, 2, 2), (2, 4, 2)]
 
 
 def _rand_problem(seed, widths, n=5):
@@ -73,7 +79,71 @@ def test_update_matrices_match_dense(x64, widths, seed):
     new = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0)
     old = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
                               engine="dense")
+    opb = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                              engine="local_opb")
     assert _max_err(new, old) <= 1e-10
+    assert _max_err(opb, old) <= 1e-10
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+@pytest.mark.parametrize("seed", [7, 41])
+def test_update_matrices_weighted_match_dense(x64, widths, seed):
+    """Low-rank-B vs dense oracle with per-example weights (incl. a
+    zero-weight padding slot): the weighted Prop.-1 average must stay in
+    the x64 parity budget — no float32 hard-cast on the weights path."""
+    params, phi_in, phi_out = _rand_problem(seed, widths, n=6)
+    w = jax.random.uniform(jax.random.PRNGKey(seed + 1), (6,),
+                           dtype=jnp.float64)
+    w = w.at[0].set(0.0)  # padding example must drop out entirely
+    new = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                              weights=w)
+    old = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                              engine="dense", weights=w)
+    opb = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                              engine="local_opb", weights=w)
+    assert _max_err(new, old) <= 1e-10
+    assert _max_err(opb, old) <= 1e-10
+    for k in new:
+        assert k.dtype == jnp.complex128  # weights must not demote
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+def test_backward_ensemble_matches_adjoint(x64, widths):
+    """The ensemble-B sigma chain: density_from_ensemble(w^l) must equal
+    the operator-space adjoint chain at every layer."""
+    params, _, phi_out = _rand_problem(13, widths)
+    svs = qnn.backward_ensemble(params, phi_out, widths)
+    sigmas = qnn.backward(params, ql.pure_density(phi_out), widths)
+    for l, (sv, sg) in enumerate(zip(svs, sigmas)):
+        # rank bound: the ensemble never exceeds the layer dimension
+        assert sv.shape[-2] <= sv.shape[-1], (l, sv.shape)
+        err = float(jnp.max(jnp.abs(qnn.density_from_ensemble(sv) - sg)))
+        assert err <= 1e-10, (l, err)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), data=st.data())
+def test_backward_ensemble_matches_layer_adjoint_property(seed, data):
+    """Hypothesis: one ensemble-B sigma step == layer_adjoint, for random
+    layer shapes, ensemble ranks, and batch sizes (x64)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        m_in = data.draw(st.integers(1, 3))
+        m_out = data.draw(st.integers(1, 3))
+        rank = data.draw(st.integers(1, 2 ** m_out + 2))
+        batch = data.draw(st.integers(1, 3))
+        key = jax.random.PRNGKey(seed)
+        ku, ks_ = jax.random.split(key)
+        us = ql.haar_unitary(ku, qnn.perceptron_dim(m_in), batch=(m_out,))
+        sv = ql.haar_state(ks_, m_out, (batch, rank))
+        sv_prev = qnn._sigma_step_ensemble(us, sv, m_in, m_out)
+        want = qnn.layer_adjoint(us, qnn.density_from_ensemble(sv),
+                                 m_in, m_out)
+        got = qnn.density_from_ensemble(sv_prev)
+        assert float(jnp.max(jnp.abs(got - want))) <= 1e-10
+    finally:
+        jax.config.update("jax_enable_x64", prev)
 
 
 @pytest.mark.parametrize("widths", [(2, 3, 2), (1, 2, 1)])
@@ -99,7 +169,7 @@ def test_server_round_matches_dense(x64, aggregation, impl):
                                             n_test=8)
     params = qnn.init_params(jax.random.PRNGKey(12), widths)
     outs = {}
-    for engine in ("local", "dense"):
+    for engine in ("local", "local_opb", "dense"):
         cfg = fed.QuantumFedConfig(widths=widths, num_nodes=4,
                                    nodes_per_round=4, interval_length=2,
                                    eps=0.05, aggregation=aggregation,
@@ -109,6 +179,7 @@ def test_server_round_matches_dense(x64, aggregation, impl):
                                         cfg)
     tol = 1e-10 if impl == "xla" else 1e-5
     assert _max_err(outs["local"], outs["dense"]) <= tol
+    assert _max_err(outs["local_opb"], outs["dense"]) <= 1e-10
 
 
 def test_local_step_no_recompile_on_hyperparams():
@@ -161,3 +232,84 @@ def test_cost_fidelity_pallas_matches_xla(x64):
     f_p = qnn.cost_fidelity(params, phi_in, phi_out, widths, impl="pallas")
     f_x = qnn.cost_fidelity(params, phi_in, phi_out, widths, impl="xla")
     np.testing.assert_allclose(float(f_p), float(f_x), atol=1e-5)
+
+
+def test_cost_mse_pallas_matches_xla(x64):
+    """The MSE eval path must honor impl, not silently run xla."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(10, widths)
+    f_p = qnn.cost_mse(params, phi_in, phi_out, widths, impl="pallas")
+    f_x = qnn.cost_mse(params, phi_in, phi_out, widths, impl="xla")
+    np.testing.assert_allclose(float(f_p), float(f_x), atol=1e-5)
+
+
+def test_outputs_and_evaluate_pallas_match_xla(x64):
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(12, widths)
+    rho_p = qnn.outputs(params, phi_in, widths, impl="pallas")
+    rho_x = qnn.outputs(params, phi_in, widths, impl="xla")
+    np.testing.assert_allclose(np.asarray(rho_p), np.asarray(rho_x),
+                               atol=1e-5)
+    m_p = fed.evaluate(params, phi_in, phi_out, widths, impl="pallas")
+    m_x = fed.evaluate(params, phi_in, phi_out, widths, impl="xla")
+    for k in ("fidelity", "mse"):
+        np.testing.assert_allclose(float(m_p[k]), float(m_x[k]), atol=1e-5)
+
+
+def test_ensemble_commutator_traces_pallas_matches_xla(x64):
+    """The fused ensemble-commutator-trace kernel vs the einsum path,
+    both ensemble orientations (fold through either side)."""
+    m_in, m_out = 2, 3
+    n = m_in + m_out
+    key = jax.random.PRNGKey(5)
+    ka, kb = jax.random.split(key)
+    for ea, eb in ((2, 6), (6, 2)):
+        a = ql.haar_state(ka, n, (m_out, 4, ea))
+        b = ql.haar_state(kb, n, (m_out, 4, eb))
+        t_x = qnn.ensemble_commutator_traces(a, b, m_in, m_out, impl="xla")
+        t_p = qnn.ensemble_commutator_traces(a, b, m_in, m_out,
+                                             impl="pallas")
+        assert t_x.shape == (m_out, 8, 8)
+        np.testing.assert_allclose(np.asarray(t_p), np.asarray(t_x),
+                                   atol=1e-5)
+
+
+# ------------------------------------------------- update application
+def test_apply_updates_grouped_matches_per_layer(x64):
+    """Same-dimension layers batch into one eigh/bmm — results must be
+    identical to the naive per-layer loop (deep equal-width net)."""
+    widths = (2, 2, 2, 2)
+    params, phi_in, phi_out = _rand_problem(14, widths)
+    ks = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0)
+    got = qnn.apply_updates(params, ks, 0.07)
+    want = [qnn.bmm(ql.expm_herm(k, 0.07), us)
+            for k, us in zip(ks, params)]
+    assert _max_err(got, want) <= 1e-12
+    ups = qnn.update_unitaries(ks, 0.03)
+    want_u = [ql.expm_herm(k, 0.03) for k in ks]
+    assert _max_err(ups, want_u) <= 1e-12
+    applied = qnn.apply_unitary_updates(params, ups)
+    want_a = [u @ p for u, p in zip(ups, params)]
+    assert _max_err(applied, want_a) <= 1e-12
+
+
+def test_eigh_factor_reuse_matches_expm(x64):
+    """aggregate_product from the node pass's cached eigh factors must
+    match the recomputed-eigh path <= 1e-10 (upload-scale reuse)."""
+    widths = (2, 3, 2)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(21), 2,
+                                            num_nodes=3, n_per_node=4,
+                                            n_test=4)
+    params = qnn.init_params(jax.random.PRNGKey(22), widths)
+    cfg = fed.QuantumFedConfig(widths=widths, num_nodes=3,
+                               nodes_per_round=3, interval_length=2,
+                               eps=0.05)
+    keys = jax.random.split(jax.random.PRNGKey(23), 3)
+    ks_all, factors = fed._node_batch(params, ds.phi_in, ds.phi_out, keys,
+                                      None, cfg.eta, cfg.eps, cfg,
+                                      with_factors=True)
+    w = jnp.full((3,), 1.0 / 3.0)
+    with_f = fed.aggregate_product(params, ks_all, w, cfg.eps,
+                                   factors=factors)
+    without = fed.aggregate_product(params, ks_all, w, cfg.eps)
+    assert _max_err(with_f, without) <= 1e-10
