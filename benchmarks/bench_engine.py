@@ -2,11 +2,14 @@
 the three engine generations across growing widths — ``dense`` (seed
 full-space), ``local_opb`` (PR-1 local contractions, operator-space B
 chain) and ``local`` (low-rank ensemble B chains, the current default)
-— the headline numbers of the engine rebuild. Plus the strategy-driven
-round: wall time per aggregation mode (product / average / served) and
-the shard_map pod-sharded fan-out (timed in a subprocess with faked
-host devices, the dryrun trick). Emits ``BENCH_engine.json`` so later
-PRs can track the trajectory.
+— the headline numbers of the engine rebuild. Plus the certified
+approximate-rank sweep (rank_tol / rank_cap truncation vs the exact
+local engine under the same config, each cell carrying its per-round
+error certificate — the width-frontier claim lives here), the
+strategy-driven round: wall time per aggregation mode (product /
+average / served) and the shard_map pod-sharded fan-out (timed in a
+subprocess with faked host devices, the dryrun trick). Emits
+``BENCH_engine.json`` so later PRs can track the trajectory.
 
     PYTHONPATH=src python -m benchmarks.bench_engine [--out BENCH_engine.json]
     PYTHONPATH=src python -m benchmarks.bench_engine --quick   # CI smoke
@@ -36,6 +39,26 @@ WIDTH_SETS = (((2, 3, 2), 5), ((3, 4, 3), 3), ((4, 5, 4), 1),
 
 # the tiny cell the CI smoke job runs (seconds, not minutes)
 QUICK_WIDTH_SETS = (((2, 3, 2), 3),)
+
+# certified approximate-rank sweep: (widths, reps, cfg overrides). The
+# knobs (rank_tol / rank_cap / minibatch / interval_length) are part of
+# each cell and recorded in the emitted entry; every cell is timed
+# against the EXACT local engine under the identical config minus the
+# approx knobs, and carries its per-round error certificate. The last
+# two cells are the width-frontier claim: (5,6,5) — 2048-dim layer
+# spaces — at interactive per-round latency the exact engine cannot
+# match on this backend.
+APPROX_SETS = (
+    ((3, 4, 3), 5, dict(interval_length=2, rank_tol=1e-3, rank_cap=6)),
+    ((4, 5, 4), 3, dict(interval_length=2, rank_tol=1e-3, rank_cap=6)),
+    ((5, 6, 5), 3, dict(interval_length=1, rank_tol=1e-3, rank_cap=4)),
+    ((5, 6, 5), 3, dict(interval_length=1, rank_tol=1e-3, rank_cap=4,
+                        minibatch=2)),
+)
+
+QUICK_APPROX_SETS = (
+    ((2, 3, 2), 3, dict(interval_length=2, rank_tol=1e-3, rank_cap=2)),
+)
 
 ENGINES = ("local", "local_opb", "dense")
 
@@ -121,6 +144,59 @@ def bench_engines(rows, width_sets=WIDTH_SETS):
     return results
 
 
+APPROX_BENCH_CONFIG = {"num_nodes": 4, "nodes_per_round": 2,
+                       "n_per_node": 4}
+
+APPROX_KNOB_KEYS = ("rank_tol", "rank_cap", "ensemble_dtype")
+
+
+def bench_approx_rank(rows, approx_sets=APPROX_SETS):
+    """Certified approximate-rank engine vs the exact local engine, same
+    config cell by cell, with the round's error certificate attached."""
+    print("# certified approx-rank server_round vs exact local "
+          "(same config; err_bound = per-round certificate)")
+    results = []
+    for widths, reps, overrides in approx_sets:
+        key = jax.random.PRNGKey(0)
+        _, ds, _ = qdata.make_federated_dataset(
+            key, widths[0], num_nodes=APPROX_BENCH_CONFIG["num_nodes"],
+            n_per_node=APPROX_BENCH_CONFIG["n_per_node"], n_test=4)
+        params = qnn.init_params(jax.random.PRNGKey(1), widths)
+        cfg = qnn_232.config(
+            widths=widths, num_nodes=APPROX_BENCH_CONFIG["num_nodes"],
+            nodes_per_round=APPROX_BENCH_CONFIG["nodes_per_round"],
+            eps=0.05, **overrides)
+        exact_cfg = cfg._replace(rank_tol=0.0, rank_cap=None,
+                                 ensemble_dtype=None)
+        tkey = jax.random.PRNGKey(2)
+        approx_ms = time_round(cfg, params, ds, tkey, reps) * 1e3
+        exact_ms = time_round(exact_cfg, params, ds, tkey,
+                              max(1, reps - 1)) * 1e3
+        _, _, bound = jax.block_until_ready(
+            fed.server_round_certified(params, ds, tkey, cfg))
+        entry = {"widths": list(widths),
+                 "interval_length": cfg.interval_length,
+                 "minibatch": cfg.minibatch,
+                 "rank_tol": cfg.rank_tol,
+                 "rank_cap": cfg.rank_cap,
+                 "ensemble_dtype": cfg.ensemble_dtype,
+                 "approx_ms": approx_ms,
+                 "exact_local_ms": exact_ms,
+                 "speedup_vs_exact": exact_ms / approx_ms,
+                 "err_bound_round": float(bound)}
+        results.append(entry)
+        knobs = " ".join(f"{k}={getattr(cfg, k)}" for k in APPROX_KNOB_KEYS
+                         if getattr(cfg, k) not in (0.0, None))
+        name = "-".join(map(str, widths))
+        print(f"  widths={widths}  exact {exact_ms:9.2f} ms  approx "
+              f"{approx_ms:9.2f} ms  ({entry['speedup_vs_exact']:4.1f}x, "
+              f"err_bound {entry['err_bound_round']:.3g}, {knobs})")
+        rows.append((f"engine_round/{name}/approx_rank", approx_ms * 1e3,
+                     f"{knobs} err_bound={entry['err_bound_round']:.3g}"))
+    return {"backend": jax.default_backend(),
+            "config": dict(APPROX_BENCH_CONFIG), "results": results}
+
+
 AGG_BENCH_CONFIG = {"num_nodes": 8, "nodes_per_round": 4,
                     "interval_length": 2, "n_per_node": 4}
 
@@ -179,6 +255,8 @@ def main(rows=None, out_path: str = "BENCH_engine.json",
     rows = rows if rows is not None else []
     engine_results = bench_engines(rows,
                                    QUICK_WIDTH_SETS if quick else WIDTH_SETS)
+    approx_results = bench_approx_rank(
+        rows, QUICK_APPROX_SETS if quick else APPROX_SETS)
     agg_results = None if quick else bench_aggregation_modes(rows)
     shard_results = None if quick else bench_shard_map(rows)
     if out_path:
@@ -187,7 +265,8 @@ def main(rows=None, out_path: str = "BENCH_engine.json",
                    "config": {"num_nodes": 4, "nodes_per_round": 2,
                               "interval_length": 2, "n_per_node": 4},
                    "engines": list(ENGINES),
-                   "results": engine_results}
+                   "results": engine_results,
+                   "approx_rank": approx_results}
         if not quick:
             payload["aggregation_modes"] = agg_results  # per-section config
             payload["shard_map_fanout"] = shard_results  # inside each entry

@@ -69,6 +69,11 @@ class FedSpec:
     engine: str = "local"
     impl: str = "xla"
     fanout: str = "auto"
+    # certified approximate rank (engine="local" only): SVD-truncated
+    # ensembles with a per-round error certificate (see qnn docs)
+    rank_tol: float = 0.0
+    rank_cap: Optional[int] = None
+    ensemble_dtype: Optional[str] = None  # None | "f32" | "bf16"
     # --- classical substrate ------------------------------------------
     arch: Optional[str] = None    # model config name (repro.configs)
     n_layers: Optional[int] = None  # reduced(n_layers=...) override
@@ -156,6 +161,16 @@ class FedSpec:
             if self.minibatch is not None and self.minibatch < 1:
                 raise ValueError(f"minibatch must be positive, got "
                                  f"{self.minibatch}")
+            # approximate-rank knobs: validate through the engine's own
+            # resolver, and only the certified local engine may use them
+            from repro.core.quantum import linalg as ql
+            approx = ql.resolve_approx(self.rank_tol, self.rank_cap,
+                                       self.ensemble_dtype)
+            if approx is not None and self.engine != "local":
+                raise ValueError(
+                    "rank_tol/rank_cap/ensemble_dtype select the "
+                    "certified approximate engine — engine='local' only, "
+                    f"got engine={self.engine!r}")
         else:
             # the classical substrate aggregates additive deltas — the
             # multiplicative Eq. 6 form does not exist for it
@@ -169,6 +184,11 @@ class FedSpec:
                     "upload_noise (Hermitian GUE channel) is quantum-only"
                     " — real deltas have no GUE perturbation; use "
                     "quantize_bits for a classical channel")
+            if (self.rank_tol != 0.0 or self.rank_cap is not None
+                    or self.ensemble_dtype is not None):
+                raise ValueError("rank_tol/rank_cap/ensemble_dtype (the "
+                                 "certified approximate-rank engine) are "
+                                 "quantum-only")
 
     # -- constructors ---------------------------------------------------
     @classmethod
@@ -227,7 +247,8 @@ class FedSpec:
             engine=self.engine, impl=self.impl,
             participation=self.participation,
             dropout_rate=self.dropout_rate, fanout=self.fanout,
-            quantize_bits=self.quantize_bits)
+            quantize_bits=self.quantize_bits, rank_tol=self.rank_tol,
+            rank_cap=self.rank_cap, ensemble_dtype=self.ensemble_dtype)
 
     @classmethod
     def from_quantum_config(cls, cfg, **data_recipe) -> "FedSpec":
@@ -241,7 +262,9 @@ class FedSpec:
             upload_noise=cfg.upload_noise, engine=cfg.engine,
             impl=cfg.impl, participation=cfg.participation,
             dropout_rate=cfg.dropout_rate, fanout=cfg.fanout,
-            quantize_bits=cfg.quantize_bits, **data_recipe)
+            quantize_bits=cfg.quantize_bits, rank_tol=cfg.rank_tol,
+            rank_cap=cfg.rank_cap, ensemble_dtype=cfg.ensemble_dtype,
+            **data_recipe)
 
     def to_classical_config(self) -> FederatedConfig:
         """The legacy ``FederatedConfig`` this spec denotes."""

@@ -87,9 +87,14 @@ class QuantumSubstrate:
     unitaries — or, with ``spec.server_opt != "none"``, the dict
     ``{"params": [...], "smom": [...] | None}`` carrying the server
     momentum on the aggregated generators (None until the first
-    aggregation). Pass ``dataset``/``test`` explicitly, or leave them
-    None to rebuild both from the spec's data recipe (deterministic in
-    ``spec.data_seed``).
+    aggregation). With the certified approximate-rank engine on
+    (``spec.rank_tol`` / ``rank_cap`` / ``ensemble_dtype``) the state is
+    always the dict form and additionally carries ``"err_bound"`` — the
+    RUNNING sum of per-round error certificates; each round's increment
+    is reported in the round metrics and ``evaluate`` surfaces the
+    accumulated total alongside fidelity. Pass ``dataset``/``test``
+    explicitly, or leave them None to rebuild both from the spec's data
+    recipe (deterministic in ``spec.data_seed``).
     """
 
     def __init__(self, spec: FedSpec, dataset=None,
@@ -99,8 +104,12 @@ class QuantumSubstrate:
         if spec.substrate != "quantum":
             raise ValueError(f"QuantumSubstrate needs a quantum spec, got "
                              f"{spec.substrate!r}")
+        from repro.core.quantum import linalg as ql
+
         self.spec = spec
         self.cfg = spec.to_quantum_config()
+        self._certified = ql.resolve_approx(
+            spec.rank_tol, spec.rank_cap, spec.ensemble_dtype) is not None
         if (dataset is None) != (test is None):
             # regenerating one half from the recipe would pair it with a
             # DIFFERENT hidden target unitary than the provided half
@@ -131,10 +140,19 @@ class QuantumSubstrate:
     def _smom_of(self, state):
         return state.get("smom") if isinstance(state, dict) else None
 
-    def _pack(self, params, smom):
-        if self.spec.server_opt == "none":
+    def _err_of(self, state):
+        if isinstance(state, dict) and "err_bound" in state:
+            return state["err_bound"]
+        return jnp.zeros(())
+
+    def _pack(self, params, smom, err_bound=None):
+        if self.spec.server_opt == "none" and not self._certified:
             return params  # legacy state shape, bit-compatible ckpts
-        return {"params": params, "smom": smom}
+        state = {"params": params, "smom": smom}
+        if self._certified:
+            state["err_bound"] = (jnp.zeros(()) if err_bound is None
+                                  else err_bound)
+        return state
 
     def init_state(self, key: jax.Array, params: Any = None):
         from repro.core.quantum import qnn
@@ -145,11 +163,15 @@ class QuantumSubstrate:
     def run_round(self, state, key, round):
         from repro.core.quantum import federated as fed
         del round  # the quantum round is pure in (state, key)
-        params, smom = fed.server_round_opt(
-            self._params_of(state), self._smom_of(state), self.dataset,
-            key, self.cfg, server_opt=self.spec.server_opt,
+        params, smom, bound = fed.server_round_certified(
+            self._params_of(state), self.dataset, key, self.cfg,
+            smom=self._smom_of(state), server_opt=self.spec.server_opt,
             server_beta=self.spec.server_momentum)
-        return self._pack(params, smom), {}
+        if not self._certified:
+            return self._pack(params, smom), {}
+        err = self._err_of(state) + bound
+        return (self._pack(params, smom, err),
+                {"err_bound_round": bound, "err_bound_total": err})
 
     # -- the four phases (see repro.core.fed.api.phases) ----------------
     def split_round_key(self, key: jax.Array):
@@ -164,9 +186,23 @@ class QuantumSubstrate:
 
     def local_update(self, state, cohort: Cohort, key: jax.Array):
         from repro.core.quantum import federated as fed
-        ks_all = fed.local_phase(self._params_of(state), self.dataset,
-                                 cohort.sel, key, self.cfg)
-        return state, ks_all, {}
+        if not self._certified:
+            ks_all = fed.local_phase(self._params_of(state), self.dataset,
+                                     cohort.sel, key, self.cfg)
+            return state, ks_all, {}
+        # certified engine: the cohort's per-node certificates combine
+        # with its selection weights at dispatch time (the uploads are
+        # approximate the moment they are born, whatever round they
+        # later commit in) and accumulate into the state's running total
+        ks_all, bounds = fed.local_phase(self._params_of(state),
+                                         self.dataset, cohort.sel, key,
+                                         self.cfg, with_bound=True)
+        bound = jnp.sum(cohort.weights.astype(bounds.dtype) * bounds)
+        err = self._err_of(state) + bound
+        state = self._pack(self._params_of(state), self._smom_of(state),
+                           err)
+        return state, ks_all, {"err_bound_round": bound,
+                               "err_bound_total": err}
 
     def transmit(self, uploads, key: jax.Array):
         from repro.core.quantum import federated as fed
@@ -178,7 +214,7 @@ class QuantumSubstrate:
             self._params_of(state), received, weights, self.cfg,
             smom=self._smom_of(state), server_opt=self.spec.server_opt,
             server_beta=self.spec.server_momentum)
-        return self._pack(params, smom)
+        return self._pack(params, smom, self._err_of(state))
 
     def upload_restore(self, flat: Dict[str, Any]):
         n_layers = len(self.spec.widths) - 1
@@ -193,13 +229,20 @@ class QuantumSubstrate:
                           weights=self._train_w)
         te = fed.evaluate(params, self.test[0], self.test[1],
                           self.spec.widths, impl=self.spec.impl)
-        return _device_get_floats({"train": tr, "test": te})
+        tree = {"train": tr, "test": te}
+        if self._certified:
+            # the certificate travels with fidelity: accumulated bound
+            # on how far the approximate engine may have drifted
+            tree["err_bound"] = self._err_of(state)
+        return _device_get_floats(tree)
 
     def state_flat(self, state) -> Dict[str, Any]:
         flat = {"params": list(self._params_of(state))}
         smom = self._smom_of(state)
         if smom is not None:
             flat["smom"] = list(smom)
+        if self._certified:
+            flat["err_bound"] = self._err_of(state)
         return flat
 
     def state_restore(self, flat: Dict[str, Any]):
@@ -210,7 +253,9 @@ class QuantumSubstrate:
         if any(k.startswith("smom/") for k in flat):
             smom = [jnp.asarray(flat[f"smom/{i}"])
                     for i in range(n_layers)]
-        return self._pack(params, smom)
+        err = (jnp.asarray(flat["err_bound"]) if "err_bound" in flat
+               else None)
+        return self._pack(params, smom, err)
 
 
 class ClassicalSubstrate:

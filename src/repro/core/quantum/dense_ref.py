@@ -90,6 +90,25 @@ def backward(params: Params, sigma_out: jax.Array, widths: Sequence[int]
     return sigmas[::-1]
 
 
+def oracle_deviation(ks: Params, params: Params, phi_in: jax.Array,
+                     phi_out: jax.Array, widths: Sequence[int], eta,
+                     weights: Optional[jax.Array] = None) -> jax.Array:
+    """Max-abs entrywise deviation of ``ks`` against the dense oracle.
+
+    Recomputes the Prop.-1 update matrices through the full-space
+    sandwich path and returns max_l max_j |ks - ks_oracle| — the measured
+    error a certified approximate-rank bound must dominate. Used by
+    ``tests/test_engine_equivalence.py`` and the approx-rank sweep in
+    ``benchmarks/bench_engine.py``.
+    """
+    ks_ref = update_matrices(params, phi_in, phi_out, widths, eta,
+                             weights=weights)
+    dev = jnp.zeros((), ql.real_dtype(ks_ref[0].dtype))
+    for k, kr in zip(ks, ks_ref):
+        dev = jnp.maximum(dev, jnp.max(jnp.abs(k - kr)))
+    return dev
+
+
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
                     widths: Sequence[int], eta,
                     weights: Optional[jax.Array] = None) -> Params:

@@ -87,12 +87,25 @@ class QuantumFedConfig(NamedTuple):
     dropout_rate: float = 0.0         # straggler rate for "dropout"
     fanout: str = "auto"              # "auto" | "vmap" | "shard_map"
     quantize_bits: Optional[int] = None  # channel registry: "quantize"
+    # certified approximate rank (engine="local" only): SVD-truncated
+    # ensembles with a tracked error bound — see qnn.update_matrices.
+    rank_tol: float = 0.0             # relative singular-value threshold
+    rank_cap: Optional[int] = None    # absolute per-compression rank cap
+    ensemble_dtype: Optional[str] = None  # None | "f32" | "bf16" storage
+
+
+def _approx_on(cfg: QuantumFedConfig) -> bool:
+    """True when cfg requests the certified approximate-rank engine
+    (also validates the knobs — fails loudly before tracing)."""
+    return ql.resolve_approx(cfg.rank_tol, cfg.rank_cap,
+                             cfg.ensemble_dtype) is not None
 
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
                 key: jax.Array, eta, eps, cfg: QuantumFedConfig,
                 mask: Optional[jax.Array] = None,
-                return_factors: bool = False):
+                return_factors: bool = False,
+                with_bound: bool = False):
     """QuanFedNode: I_l temporary-update steps on one node's local data.
 
     mask: optional (n_per,) validity mask for padded unequal-size nodes —
@@ -107,6 +120,9 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
     temporary updates were formed from — (lam, v) per layer, stacked
     (I_l, m_l, d) / (I_l, m_l, d, d) — so a product-combine server can
     exponentiate the SAME K at the upload scale without a second eigh.
+    ``with_bound=True`` appends the node's scalar approximation-error
+    certificate (the per-step ``qnn.update_matrices`` bounds summed over
+    the interval; 0.0 for exact configs).
     """
     n_per = phi_in.shape[0]
 
@@ -125,15 +141,26 @@ def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
             b_in, b_out = phi_in[idx], phi_out[idx]
         else:
             b_in, b_out, b_w = phi_in, phi_out, mask
-        ks = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
-                                 engine=cfg.engine, impl=cfg.impl,
-                                 weights=b_w)
+        out = qnn.update_matrices(p, b_in, b_out, cfg.widths, eta,
+                                  engine=cfg.engine, impl=cfg.impl,
+                                  weights=b_w, rank_tol=cfg.rank_tol,
+                                  rank_cap=cfg.rank_cap,
+                                  ensemble_dtype=cfg.ensemble_dtype,
+                                  with_bound=with_bound)
+        ks, bnd = out if with_bound else (out, None)
         factors = qnn.eigh_updates(ks)
         p = qnn.apply_updates_eigh(p, factors, eps, impl=cfg.impl)
-        return p, (ks, factors)
+        return p, ((ks, factors, bnd) if with_bound else (ks, factors))
 
     keys = jax.random.split(key, cfg.interval_length)
-    _, (ks_seq, factors_seq) = jax.lax.scan(one_step, params, keys)
+    _, out = jax.lax.scan(one_step, params, keys)
+    if with_bound:
+        ks_seq, factors_seq, bnds = out
+        bound = jnp.sum(bnds)
+        if return_factors:
+            return ks_seq, factors_seq, bound
+        return ks_seq, bound
+    ks_seq, factors_seq = out
     if return_factors:
         return ks_seq, factors_seq
     return ks_seq  # list per layer: (I_l, m_l, d, d)
@@ -193,28 +220,30 @@ def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
 def _node_batch(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
                 node_keys: jax.Array, node_mask: Optional[jax.Array],
                 eta, eps, cfg: QuantumFedConfig,
-                with_factors: bool = False):
+                with_factors: bool = False, with_bound: bool = False):
     """vmap the QuanFedNode pass over the leading node axis."""
     if node_mask is None:
         f = lambda ni, no, nk: node_update(params, ni, no, nk, eta, eps,
-                                           cfg, return_factors=with_factors)
+                                           cfg, return_factors=with_factors,
+                                           with_bound=with_bound)
         return jax.vmap(f)(node_in, node_out, node_keys)
     f = lambda ni, no, nk, nm: node_update(params, ni, no, nk, eta, eps,
                                            cfg, nm,
-                                           return_factors=with_factors)
+                                           return_factors=with_factors,
+                                           with_bound=with_bound)
     return jax.vmap(f)(node_in, node_out, node_keys, node_mask)
 
 
 def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
              node_keys: jax.Array, node_mask: Optional[jax.Array],
              eta, eps, cfg: QuantumFedConfig, mesh,
-             with_factors: bool = False):
+             with_factors: bool = False, with_bound: bool = False):
     """Per-node fan-out: vmap, or shard_map over the 'fed_node' mesh axis
     (each pod runs its slice of the sampled nodes; the weighted
     aggregation that follows is the round's one cross-pod reduction)."""
     if cfg.fanout != "shard_map":
         return _node_batch(params, node_in, node_out, node_keys, node_mask,
-                           eta, eps, cfg, with_factors)
+                           eta, eps, cfg, with_factors, with_bound)
     axis = rules.fed_fanout_axis(mesh) if mesh is not None else None
     if axis is None:
         raise ValueError(
@@ -228,12 +257,12 @@ def _fan_out(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
     rep, shard = P(), P(axis)
     if node_mask is None:
         body = lambda p, ni, no, nk, et, ep: _node_batch(
-            p, ni, no, nk, None, et, ep, cfg, with_factors)
+            p, ni, no, nk, None, et, ep, cfg, with_factors, with_bound)
         in_specs = (rep, shard, shard, shard, rep, rep)
         args = (params, node_in, node_out, node_keys, eta, eps)
     else:
         body = lambda p, ni, no, nk, nm, et, ep: _node_batch(
-            p, ni, no, nk, nm, et, ep, cfg, with_factors)
+            p, ni, no, nk, nm, et, ep, cfg, with_factors, with_bound)
         in_specs = (rep, shard, shard, shard, shard, rep, rep)
         args = (params, node_in, node_out, node_keys, node_mask, eta, eps)
     fan = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=shard,
@@ -267,7 +296,8 @@ def _select_impl(dataset: QuantumDataset, key: jax.Array,
 
 def _local_impl(params: qnn.Params, dataset: QuantumDataset,
                 sel: jax.Array, key: jax.Array, eta, eps,
-                cfg: QuantumFedConfig, mesh, with_factors: bool = False):
+                cfg: QuantumFedConfig, mesh, with_factors: bool = False,
+                with_bound: bool = False):
     """QuanFedNode on every selected node (vmapped or pod-sharded)."""
     node_in = dataset.phi_in[sel]    # (N_p, n_max, d_in)
     node_out = dataset.phi_out[sel]  # (N_p, n_max, d_out)
@@ -275,7 +305,7 @@ def _local_impl(params: qnn.Params, dataset: QuantumDataset,
     vmask = dataset.valid_mask()
     node_mask = None if vmask is None else vmask[sel]
     return _fan_out(params, node_in, node_out, node_keys, node_mask,
-                    eta, eps, cfg, mesh, with_factors)
+                    eta, eps, cfg, mesh, with_factors, with_bound)
 
 
 def _factors_survive_wire(cfg: QuantumFedConfig) -> bool:
@@ -329,15 +359,32 @@ def _server_round(params: qnn.Params, smom, dataset: QuantumDataset,
                   key: jax.Array, eta, eps, server_beta,
                   cfg: QuantumFedConfig, mesh=None,
                   server_opt: str = "none"):
+    """Returns ``(new_params, new_smom, err_bound)`` — err_bound is the
+    round's accumulated approximation-error certificate (the per-node
+    bounds combined with the aggregation weights; a 0.0 scalar for exact
+    configs, where its computation is dead code jit removes)."""
     k_sel, k_node, k_noise = jax.random.split(key, 3)
     sel, _, weights = _select_impl(dataset, k_sel, cfg)
     reuse = _factors_survive_wire(cfg)
+    certify = _approx_on(cfg)
     out = _local_impl(params, dataset, sel, k_node, eta, eps, cfg, mesh,
-                      with_factors=reuse)
-    ks_all, factors = out if reuse else (out, None)
+                      with_factors=reuse, with_bound=certify)
+    if reuse and certify:
+        ks_all, factors, bounds = out
+    elif reuse:
+        (ks_all, factors), bounds = out, None
+    elif certify:
+        (ks_all, bounds), factors = out, None
+    else:
+        ks_all, factors, bounds = out, None, None
     ks_all = _transmit_impl(ks_all, k_noise, cfg)
-    return _aggregate_impl(params, smom, ks_all, weights, eps,
-                           server_beta, cfg, server_opt, factors=factors)
+    new_params, new_smom = _aggregate_impl(
+        params, smom, ks_all, weights, eps, server_beta, cfg, server_opt,
+        factors=factors)
+    rdt = ql.real_dtype(ql.default_dtype())
+    err_bound = (jnp.sum(weights.astype(rdt) * bounds.astype(rdt))
+                 if certify else jnp.zeros((), rdt))
+    return new_params, new_smom, err_bound
 
 
 def _resolve_fanout(cfg: QuantumFedConfig) -> str:
@@ -383,6 +430,27 @@ def server_round_opt(params: qnn.Params, smom, dataset: QuantumDataset,
     ``server_opt == "none"``)."""
     fserver_opt.validate(server_opt)
     static_cfg, mesh = _round_statics(cfg)
+    new_params, new_smom, _ = _server_round(
+        params, smom, dataset, key, cfg.eta, cfg.eps, server_beta,
+        static_cfg, mesh, server_opt)
+    return new_params, new_smom
+
+
+def server_round_certified(params: qnn.Params, dataset: QuantumDataset,
+                           key: jax.Array, cfg: QuantumFedConfig,
+                           smom=None, server_opt: str = "none",
+                           server_beta: float = 0.9):
+    """``server_round_opt`` that also surfaces the round's accumulated
+    approximation-error certificate: returns ``(new_params, new_smom,
+    err_bound)``. err_bound is a real scalar bounding the total max-abs
+    deviation of this round's update matrices from the exact engine's
+    (per-node bounds from ``qnn.update_matrices(with_bound=True)``
+    combined with the Alg. 2 aggregation weights); exactly 0.0 when the
+    approximate-rank knobs are off. Same jit cache entry as the plain
+    round — the bound computation is dead code XLA strips when unused.
+    """
+    fserver_opt.validate(server_opt)
+    static_cfg, mesh = _round_statics(cfg)
     return _server_round(params, smom, dataset, key, cfg.eta, cfg.eps,
                          server_beta, static_cfg, mesh, server_opt)
 
@@ -406,18 +474,23 @@ def select_phase(dataset: QuantumDataset, key: jax.Array,
     return _select_jit(dataset, key, static_cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mesh"))
-def _local_jit(params, dataset, sel, key, eta, eps, cfg, mesh):
-    return _local_impl(params, dataset, sel, key, eta, eps, cfg, mesh)
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "with_bound"))
+def _local_jit(params, dataset, sel, key, eta, eps, cfg, mesh,
+               with_bound=False):
+    return _local_impl(params, dataset, sel, key, eta, eps, cfg, mesh,
+                       with_bound=with_bound)
 
 
 def local_phase(params: qnn.Params, dataset: QuantumDataset,
-                sel: jax.Array, key: jax.Array, cfg: QuantumFedConfig
-                ) -> List[jax.Array]:
-    """Phase 2: the QuanFedNode fan-out; per-layer (N_p, I_l, m, d, d)."""
+                sel: jax.Array, key: jax.Array, cfg: QuantumFedConfig,
+                with_bound: bool = False):
+    """Phase 2: the QuanFedNode fan-out; per-layer (N_p, I_l, m, d, d).
+    ``with_bound=True`` returns ``(ks_all, bounds)`` with the per-node
+    approximation certificates (N_p,) appended — the phased-protocol
+    form of the fused round's err_bound."""
     static_cfg, mesh = _round_statics(cfg)
     return _local_jit(params, dataset, sel, key, cfg.eta, cfg.eps,
-                      static_cfg, mesh)
+                      static_cfg, mesh, with_bound=with_bound)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

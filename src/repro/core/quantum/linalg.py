@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import functools
 import string
-from typing import Sequence
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -190,22 +190,114 @@ def partial_trace(rho: jax.Array, keep: Sequence[int], n_qubits: int) -> jax.Arr
     return out
 
 
-def ensemble_compress(v: jax.Array) -> jax.Array:
-    """Replace an ensemble v: (..., E, d) by an equivalent one with
-    min(E, d) vectors, preserving the density exactly.
+class ApproxCfg(NamedTuple):
+    """Approximate-rank policy for ensemble compression (hashable, so it
+    rides as a static jit argument alongside ``QuantumFedConfig``).
 
-    rho = sum_e v_e v_e† has rank <= d, so any ensemble with E > d
-    vectors is redundant. Stacking the vectors as rows V (E, d) and
-    QR-factoring V = Q R, the rows of R satisfy
+    rank_tol: relative singular-value threshold — rows with
+        s_i <= rank_tol * s_max are dropped (their trace-norm mass
+        sum(s_i^2) is charged to the certificate). 0.0 = exact.
+    rank_cap: absolute per-compression rank cap (static shape shrink to
+        min(E, d, rank_cap) rows); None = rank-bound only.
+    dtype: optional reduced ensemble STORAGE dtype between compressions —
+        None (full x64) | "f32" (complex64) | "bf16" (real/imag rounded
+        through bfloat16, complex64 container). The certificate covers
+        rank truncation only; dtype rounding is uncertified (documented).
+    """
+    rank_tol: float = 0.0
+    rank_cap: Optional[int] = None
+    dtype: Optional[str] = None
+
+    @property
+    def exact(self) -> bool:
+        return (self.rank_tol == 0.0 and self.rank_cap is None
+                and self.dtype is None)
+
+
+ENSEMBLE_DTYPES = (None, "f32", "bf16")
+
+
+def resolve_approx(rank_tol: float = 0.0, rank_cap: Optional[int] = None,
+                   ensemble_dtype: Optional[str] = None
+                   ) -> Optional[ApproxCfg]:
+    """Validate the (rank_tol, rank_cap, ensemble_dtype) knobs into an
+    ``ApproxCfg`` — or None when every knob is at its exact default, so
+    the callers' ``approx is None`` fast path IS the pre-approx code
+    path (bit-for-bit parity at rank_tol=0 by construction)."""
+    if not 0.0 <= float(rank_tol) < 1.0:
+        raise ValueError(f"rank_tol must be in [0, 1), got {rank_tol}")
+    if rank_cap is not None and int(rank_cap) < 1:
+        raise ValueError(f"rank_cap must be >= 1, got {rank_cap}")
+    if ensemble_dtype not in ENSEMBLE_DTYPES:
+        raise ValueError(f"unknown ensemble_dtype {ensemble_dtype!r}; "
+                         f"use one of {ENSEMBLE_DTYPES}")
+    cfg = ApproxCfg(float(rank_tol),
+                    None if rank_cap is None else int(rank_cap),
+                    ensemble_dtype)
+    return None if cfg.exact else cfg
+
+
+def ensemble_store(v: jax.Array, approx: Optional[ApproxCfg]) -> jax.Array:
+    """Cast an ensemble to the approx policy's storage dtype. "f32" is
+    complex64; "bf16" rounds real/imag through bfloat16 but keeps the
+    complex64 container (JAX has no complex-bf16) so downstream
+    contractions run at f32 speed on bf16-precision values."""
+    if approx is None or approx.dtype is None:
+        return v
+    if approx.dtype == "f32":
+        return v.astype(jnp.complex64)
+    re = jnp.real(v).astype(jnp.bfloat16).astype(jnp.float32)
+    im = jnp.imag(v).astype(jnp.bfloat16).astype(jnp.float32)
+    return (re + 1j * im).astype(jnp.complex64)
+
+
+def ensemble_compress(v: jax.Array,
+                      approx: Optional[ApproxCfg] = None,
+                      with_err: bool = False):
+    """Replace an ensemble v: (..., E, d) by an equivalent (or certified
+    approximate) one, preserving the density rho = sum_e v_e v_e†.
+
+    Exact path (approx=None): rho has rank <= d, so any ensemble with
+    E > d vectors is redundant. Stacking the vectors as rows V (E, d)
+    and QR-factoring V = Q R, the rows of R satisfy
 
         rho[a, b] = (Vᵀ V*)[a, b] = conj(R† R)[a, b]
                   = sum_g R[g, a] conj(R[g, b])
 
     i.e. R's min(E, d) rows are an ensemble for the SAME density. QR is
     backward-stable (reconstruction error ~ machine eps), so the
-    <= 1e-10 dense-oracle parity budget is untouched under x64.
+    <= 1e-10 dense-oracle parity budget is untouched under x64. This
+    branch is reached verbatim whenever approx is None — rank_tol=0
+    reproduces the exact engine bit-for-bit by construction.
+
+    Approximate path: SVD V = U S Wh. The rows s_i * Wh[i] are an exact
+    ensemble (rho = sum_i s_i^2 conj(w_i w_i†)); keeping the top
+    E' = min(E, d, rank_cap) rows and zeroing those with
+    s_i <= rank_tol * s_max drops a PSD term from rho whose trace norm
+    is EXACTLY the dropped sum(s_i^2) — the per-compression certificate.
+    with_err=True returns (compressed, err) with err of batch shape
+    (...,) in the real dtype of v; err is the trace-norm distance
+    || rho_approx - rho ||_tr, not a first-order estimate.
     """
-    return jnp.linalg.qr(v, mode="r")
+    if approx is None:
+        r = jnp.linalg.qr(v, mode="r")
+        if not with_err:
+            return r
+        return r, jnp.zeros(v.shape[:-2], real_dtype(v.dtype))
+    e, d = v.shape[-2], v.shape[-1]
+    keep = min(e, d)
+    if approx.rank_cap is not None:
+        keep = min(keep, approx.rank_cap)
+    s, wh = jnp.linalg.svd(v, full_matrices=False)[1:]  # (..., r), (..., r, d)
+    r = s.shape[-1]
+    s_max = s[..., :1]  # descending order: the largest singular value
+    mask = s > approx.rank_tol * s_max
+    mask = mask & (jnp.arange(r) < keep)
+    err = jnp.sum(jnp.where(mask, jnp.zeros_like(s), s * s), axis=-1)
+    out = (s[..., :keep] * mask[..., :keep])[..., None] * wh[..., :keep, :]
+    if not with_err:
+        return out
+    return out, err.astype(real_dtype(v.dtype))
 
 
 def ensemble_keep_major(v: jax.Array, keep: Sequence[int], n_qubits: int

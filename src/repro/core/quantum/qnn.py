@@ -177,8 +177,9 @@ def _append_ancilla(v: jax.Array, m_out: int) -> jax.Array:
 
 
 def feedforward_ensemble(params: Params, phi_in: jax.Array,
-                         widths: Sequence[int], *, compress: bool = False
-                         ) -> List[jax.Array]:
+                         widths: Sequence[int], *, compress: bool = False,
+                         approx: Optional[ql.ApproxCfg] = None,
+                         with_err: bool = False):
     """Propagate pure inputs as unnormalized state-vector ensembles.
 
     Returns [v^0, ..., v^L] with v^l of shape (..., E_l, 2**m_l) and
@@ -193,25 +194,61 @@ def feedforward_ensemble(params: Params, phi_in: jax.Array,
     (E_l <= 2**m_l, exact to machine eps — ``linalg.ensemble_compress``)
     so deep networks don't pay a multiplicative ensemble blow-up; the
     Prop.-1 update and the eval fast path run compressed.
+
+    approx: optional certified approximate-rank policy
+    (``linalg.ApproxCfg``). Compression becomes SVD truncation to
+    E_l <= min(2**m_l, rank_cap) with relative thresholding at
+    rank_tol, ensembles are held in the policy's storage dtype, and the
+    per-compression trace-norm losses accumulate per example along the
+    chain (CPTP layer channels are trace-norm contractive, so the sum
+    bounds || rho^l_approx - rho^l ||_tr). approx=None takes the
+    pre-approx code path verbatim. with_err=True additionally returns
+    the per-layer accumulated error arrays (zeros when approx=None).
     """
     vs = [phi_in[..., None, :]]  # E_0 = 1
+    errs = None
+    if approx is not None:
+        vs[0] = ql.ensemble_store(vs[0], approx)
+        errs = [jnp.zeros(phi_in.shape[:-1],
+                          ql.real_dtype(ql.default_dtype()))]
     for l in range(1, len(widths)):
         m_in, m_out = widths[l - 1], widths[l]
         n = m_in + m_out
         v = vs[-1]
-        if compress and v.shape[-2] > v.shape[-1]:
-            v = ql.ensemble_compress(v)
-            vs[-1] = v
+        if approx is None:
+            if compress and v.shape[-2] > v.shape[-1]:
+                v = ql.ensemble_compress(v)
+                vs[-1] = v
+            us = params[l - 1]
+        else:
+            d = v.shape[-1]
+            target = min(d, approx.rank_cap or d)
+            if v.shape[-2] > target or (approx.rank_tol > 0.0
+                                        and v.shape[-2] > 1):
+                v, e = ql.ensemble_compress(v, approx, with_err=True)
+                v = ql.ensemble_store(v, approx)
+                vs[-1] = v
+                errs[-1] = errs[-1] + e.astype(errs[-1].dtype)
+            us = ql.ensemble_store(params[l - 1], approx)
         w = _append_ancilla(v, m_out)
         for j in range(m_out):
-            w = ql.apply_unitary_vec(w, params[l - 1][j], _acting(m_in, j), n)
+            w = ql.apply_unitary_vec(w, us[j], _acting(m_in, j), n)
         # tr_in: ensemble over the input factor.
         w = w.reshape(w.shape[:-1] + (ql.dim(m_in), ql.dim(m_out)))
         vs.append(w.reshape(w.shape[:-3] + (-1, ql.dim(m_out))))
+        if approx is not None:
+            errs.append(errs[-1])
+    if with_err:
+        if errs is None:
+            z = jnp.zeros(phi_in.shape[:-1],
+                          ql.real_dtype(ql.default_dtype()))
+            errs = [z for _ in vs]
+        return vs, errs
     return vs
 
 
-def _b_ensemble_chain(us: jax.Array, sv: jax.Array, m_in: int, m_out: int
+def _b_ensemble_chain(us: jax.Array, sv: jax.Array, m_in: int, m_out: int,
+                      approx: Optional[ql.ApproxCfg] = None
                       ) -> List[jax.Array]:
     """One layer of the explicit ensemble B chain (the GEMM-shaped form
     the fused Pallas kernel consumes).
@@ -224,21 +261,42 @@ def _b_ensemble_chain(us: jax.Array, sv: jax.Array, m_in: int, m_out: int
         B_j = U_{j+1}† ... U_m† (I ⊗ sigma) U_m ... U_{j+1}
             = sum_k |c_k><c_k|,   c_k = U_{j+1}† ... U_m† (e_i ⊗ s_f)
 
-    Returns bvs with bvs[j] the B_{j+1} ensemble (0-based, shape
-    (..., d_in*R', 2**n)).
+    The FIRST peel exploits that the raw vectors are one-hot in the
+    input factor: U_m† (e_i ⊗ s_f) only contracts the d_in x 2 column
+    slice that e_i and the acting output qubit select, so it is a
+    2-term einsum per output amplitude instead of the dense
+    2**(m_in+1)-term ``apply_unitary_vec`` GEMM on the d_in-expanded
+    ensemble. Remaining peels run dense (the one-hot structure is gone).
+
+    approx holds the unitaries/ensembles in the certified storage dtype
+    (the caller pre-compresses sv and accounts the error; no additional
+    truncation happens here). Returns bvs with bvs[j] the B_{j+1}
+    ensemble (0-based, shape (..., d_in*R', 2**n)).
     """
     n = m_in + m_out
     d_in, d_out = ql.dim(m_in), ql.dim(m_out)
     if sv.shape[-2] > sv.shape[-1]:
         sv = ql.ensemble_compress(sv)
+    us = ql.ensemble_store(us, approx)
     eye_in = jnp.eye(d_in, dtype=sv.dtype)
     bv = jnp.einsum("ij,...fo->...ifjo", eye_in, sv)
     bv = bv.reshape(sv.shape[:-2] + (d_in * sv.shape[-2], d_in * d_out))
     bvs = [bv]  # index: bvs[0] corresponds to j = m_out
-    for jj in range(m_out - 1, 0, -1):
-        bv = ql.apply_unitary_vec(bv, ql.dagger(us[jj]),
-                                  _acting(m_in, jj), n)
+    if m_out > 1:
+        # one-hot first peel: perceptron m_out acts on the inputs plus
+        # the LAST (least-significant) output qubit, so with o = (r, c)
+        #   (U_m† (e_i ⊗ s_f))[(a, r, b)] = sum_c u†[(a,b),(i,c)] s_f[(r,c)]
+        jj = m_out - 1
+        udag = ql.dagger(us[jj]).reshape(d_in, 2, d_in, 2)
+        sv_t = sv.reshape(sv.shape[:-1] + (d_out // 2, 2))
+        bv = jnp.einsum("abic,...frc->...ifarb", udag, sv_t)
+        bv = bv.reshape(sv.shape[:-2]
+                        + (d_in * sv.shape[-2], d_in * d_out))
         bvs.append(bv)
+        for jj in range(m_out - 2, 0, -1):
+            bv = ql.apply_unitary_vec(bv, ql.dagger(us[jj]),
+                                      _acting(m_in, jj), n)
+            bvs.append(bv)
     return bvs[::-1]  # bvs[j-1] is B_j
 
 
@@ -256,7 +314,9 @@ def _layer_basis_response(us: jax.Array, m_in: int, m_out: int,
 
 
 def _sigma_step_ensemble(us: jax.Array, sv: jax.Array, m_in: int,
-                         m_out: int) -> jax.Array:
+                         m_out: int,
+                         approx: Optional[ql.ApproxCfg] = None,
+                         with_err: bool = False):
     """sigma^{l-1} ensemble from the sigma^l ensemble, via the basis
     response — never materializing a d_in-expanded B ensemble:
 
@@ -268,22 +328,55 @@ def _sigma_step_ensemble(us: jax.Array, sv: jax.Array, m_in: int,
     QR-compressed back to <= d_in. Cost: m_out example-independent psi
     peels + one small contraction — O(R d_in^2 d_out) per example
     instead of the O(d_in R D 2**(m_in+1)) full-ensemble peel.
+
+    approx switches both compressions to certified SVD truncation
+    (cap + rank_tol) in the storage dtype. with_err=True additionally
+    returns the step's accumulated truncation error (batch-shaped,
+    zeros when approx=None) — valid as an OPERATOR-norm budget: the
+    adjoint channel F is positive and unital, hence ||F(X)||_inf <=
+    ||X||_inf for Hermitian X (Russo–Dye), and each SVD drop removes a
+    PSD term of operator norm <= its trace mass.
     """
     d_in, d_out = ql.dim(m_in), ql.dim(m_out)
-    if sv.shape[-2] > sv.shape[-1]:
-        sv = ql.ensemble_compress(sv)
+    err = None
+    if approx is None:
+        if sv.shape[-2] > sv.shape[-1]:
+            sv = ql.ensemble_compress(sv)
+    else:
+        err = jnp.zeros(sv.shape[:-2], ql.real_dtype(ql.default_dtype()))
+        target_in = min(d_out, approx.rank_cap or d_out)
+        if sv.shape[-2] > target_in:
+            sv, e = ql.ensemble_compress(sv, approx, with_err=True)
+            sv = ql.ensemble_store(sv, approx)
+            err = err + e.astype(err.dtype)
+        us = ql.ensemble_store(us, approx)
     psi = _layer_basis_response(us, m_in, m_out, sv.dtype)
     psi_t = psi.reshape(d_in, d_in, d_out)  # (b, i, o)
     c = jnp.einsum("...go,bio->...gib", jnp.conjugate(sv), psi_t)
     sv_prev = jnp.conjugate(c).reshape(c.shape[:-3]
                                        + (sv.shape[-2] * d_in, d_in))
-    if sv_prev.shape[-2] > d_in:
-        sv_prev = ql.ensemble_compress(sv_prev)
+    if approx is None:
+        if sv_prev.shape[-2] > d_in:
+            sv_prev = ql.ensemble_compress(sv_prev)
+        if with_err:
+            return sv_prev, jnp.zeros(sv.shape[:-2],
+                                      ql.real_dtype(ql.default_dtype()))
+        return sv_prev
+    target_out = min(d_in, approx.rank_cap or d_in)
+    if sv_prev.shape[-2] > target_out or (approx.rank_tol > 0.0
+                                          and sv_prev.shape[-2] > 1):
+        sv_prev, e = ql.ensemble_compress(sv_prev, approx, with_err=True)
+        sv_prev = ql.ensemble_store(sv_prev, approx)
+        err = err + e.astype(err.dtype)
+    if with_err:
+        return sv_prev, err
     return sv_prev
 
 
 def backward_ensemble(params: Params, phi_out: jax.Array,
-                      widths: Sequence[int]) -> List[jax.Array]:
+                      widths: Sequence[int], *,
+                      approx: Optional[ql.ApproxCfg] = None,
+                      with_err: bool = False):
     """Back-propagate pure labels as state-vector ensembles.
 
     The mirror of ``feedforward_ensemble``: returns [w^0, ..., w^L] with
@@ -291,12 +384,28 @@ def backward_ensemble(params: Params, phi_out: jax.Array,
     (QR-compressed, so R_l <= 2**m_l — the low-rank bound the ensemble-B
     engine exploits). Gated against the operator-space ``layer_adjoint``
     in the engine-equivalence suite.
+
+    approx enables certified truncation per step; with_err=True also
+    returns the per-layer accumulated OPERATOR-norm error bounds
+    || sigma^l_approx - sigma^l ||_inf (index-aligned with the return,
+    zeros when approx=None) — each adjoint step is inf-norm contractive,
+    so the per-step certificates add.
     """
     L = len(widths) - 1
-    svs = [phi_out[..., None, :]]
+    sv0 = phi_out[..., None, :]
+    if approx is not None:
+        sv0 = ql.ensemble_store(sv0, approx)
+    svs = [sv0]
+    errs = [jnp.zeros(phi_out.shape[:-1],
+                      ql.real_dtype(ql.default_dtype()))]
     for l in range(L, 0, -1):
-        svs.append(_sigma_step_ensemble(params[l - 1], svs[-1],
-                                        widths[l - 1], widths[l]))
+        sv, e = _sigma_step_ensemble(params[l - 1], svs[-1],
+                                     widths[l - 1], widths[l],
+                                     approx=approx, with_err=True)
+        svs.append(sv)
+        errs.append(errs[-1] + e)
+    if with_err:
+        return svs[::-1], errs[::-1]
     return svs[::-1]
 
 
@@ -309,7 +418,8 @@ def density_from_ensemble(v: jax.Array, *, impl: str = "xla") -> jax.Array:
 
 def ensemble_commutator_traces(a_states: jax.Array, b_states: jax.Array,
                                m_in: int, m_out: int, *,
-                               impl: str = "xla") -> jax.Array:
+                               impl: str = "xla",
+                               out_dtype=None) -> jax.Array:
     """T_j = sum_x tr_rest(A_{j,x} B_{j,x}) for ALL perceptrons at once.
 
     a_states: (m_out, ..., E_A, 2**n), b_states: (m_out, ..., E_B, 2**n)
@@ -329,7 +439,10 @@ def ensemble_commutator_traces(a_states: jax.Array, b_states: jax.Array,
     ``bmm``/``kernels.ops.complex_matmul``-equivalent batched matmuls;
     impl="pallas" instead dispatches the fused ensemble-commutator-trace
     Pallas kernel (Gram + fold + trace in one VMEM-resident cell per
-    (j, example)).
+    (j, example)). out_dtype (optional) requests the trace accumulator
+    output in a wider dtype than the input ensembles — reduced-storage
+    approx runs restore x64 HERE, at the trace boundary, instead of
+    carrying it through the chains.
     """
     n = m_in + m_out
     a4 = a_states.reshape((m_out, -1) + a_states.shape[-2:])
@@ -343,8 +456,9 @@ def ensemble_commutator_traces(a_states: jax.Array, b_states: jax.Array,
                  for j in range(m_out)])
         if ea < eb:  # kernel folds through its SECOND argument
             return ql.dagger(kops.ensemble_commutator_trace(
-                km(b4), km(a4), impl=impl))
-        return kops.ensemble_commutator_trace(km(a4), km(b4), impl=impl)
+                km(b4), km(a4), impl=impl, out_dtype=out_dtype))
+        return kops.ensemble_commutator_trace(km(a4), km(b4), impl=impl,
+                                              out_dtype=out_dtype)
 
     g = jnp.einsum("jnex,jnfx->jnef", jnp.conjugate(a4), b4)
     if ea <= eb:
@@ -361,7 +475,57 @@ def ensemble_commutator_traces(a_states: jax.Array, b_states: jax.Array,
                     for j in range(m_out)])
     yk = jnp.stack([ql.ensemble_keep_major(y[j], _acting(m_in, j), n)
                     for j in range(m_out)])
-    return jnp.einsum("jnear,jnebr->jab", xk, jnp.conjugate(yk))
+    t = jnp.einsum("jnear,jnebr->jab", xk, jnp.conjugate(yk))
+    return t if out_dtype is None else t.astype(out_dtype)
+
+
+def _a_chains(params: Params, vs: Sequence[jax.Array],
+              widths: Sequence[int],
+              approx: Optional[ql.ApproxCfg] = None) -> List[list]:
+    """Per-perceptron A-chain stacks for EVERY layer up front:
+    chains[l-1][j] = a^{(j+1)} = U_{j+1} ... U_1 (v^{l-1} ⊗ |0..0>).
+
+    Layers with identical (m_in, m_out) and identical ensemble shape
+    batch into ONE vmapped peel per perceptron index j — the
+    ``_grouped_layer_map`` idea applied to the forward propagation, so
+    an equal-width deep net pays L/G peel launches instead of L (G =
+    number of equal-width groups). Singleton groups take the plain
+    per-layer loop (bit-identical to the ungrouped path).
+    """
+    L = len(widths) - 1
+    prep = []
+    for l in range(1, L + 1):
+        m_in, m_out = widths[l - 1], widths[l]
+        av = _append_ancilla(vs[l - 1], m_out)
+        us = ql.ensemble_store(params[l - 1], approx)
+        prep.append((m_in, m_out, av, us))
+    groups = {}
+    for i, (m_in, m_out, av, us) in enumerate(prep):
+        groups.setdefault((m_in, m_out, av.shape, av.dtype), []).append(i)
+    chains: List[list] = [None] * L
+    for (m_in, m_out, _, _), idxs in groups.items():
+        n = m_in + m_out
+        if len(idxs) == 1:
+            i = idxs[0]
+            av, us = prep[i][2], prep[i][3]
+            chain = []
+            for j in range(m_out):
+                av = ql.apply_unitary_vec(av, us[j], _acting(m_in, j), n)
+                chain.append(av)
+            chains[i] = chain
+            continue
+        w = jnp.stack([prep[i][2] for i in idxs])
+        ug = jnp.stack([prep[i][3] for i in idxs])  # (G, m_out, du, du)
+        per = [[] for _ in idxs]
+        for j in range(m_out):
+            peel = lambda u, x: ql.apply_unitary_vec(  # noqa: E731
+                x, u, _acting(m_in, j), n)
+            w = jax.vmap(peel)(ug[:, j], w)
+            for gi in range(len(idxs)):
+                per[gi].append(w[gi])
+        for gi, i in enumerate(idxs):
+            chains[i] = per[gi]
+    return chains
 
 
 def _weighted_label_ensemble(phi_out: jax.Array,
@@ -383,7 +547,11 @@ def _weighted_label_ensemble(phi_out: jax.Array,
 def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
                     widths: Sequence[int], eta, *, engine: str = "local",
                     impl: str = "xla",
-                    weights: Optional[jax.Array] = None) -> Params:
+                    weights: Optional[jax.Array] = None,
+                    rank_tol: float = 0.0,
+                    rank_cap: Optional[int] = None,
+                    ensemble_dtype: Optional[str] = None,
+                    with_bound: bool = False):
     """Proposition 1: closed-form Hermitian update matrices K^{l,j}.
 
         K_j^l = eta * 2^{m_{l-1}} * i / N * sum_x tr_rest M_x^{l,j}
@@ -418,42 +586,99 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     the label vectors), so all engines weight identically — in the
     state's real dtype (float64 under x64), not a float32 hard-cast.
     Returns a list like params of stacked K's (m_l, d, d).
+
+    Certified approximate rank (engine="local" only): rank_tol /
+    rank_cap / ensemble_dtype select SVD-truncated ensembles and
+    reduced storage precision (``linalg.resolve_approx``). With
+    with_bound=True the return becomes (Ks, bound) where bound is a
+    scalar certificate on the TOTAL max-abs entrywise deviation of the
+    K's from the exact engine:
+
+        |K_approx - K_exact|_max summed over layers
+          <= sum_l  eta 2^{m_in} / denom * sum_x 2 (eA_x w_x + eB_x)
+
+    with eA_x the accumulated forward trace-norm loss (CPTP layers are
+    trace-norm contractive; each SVD drop removes PSD mass of exactly
+    its dropped sum s_i^2), eB_x the accumulated backward OPERATOR-norm
+    loss (the adjoint channel is positive unital, hence inf-norm
+    contractive), via [A', B'] - [A, B] = [dA, B] + [A', dB],
+    ||[X, Y]||_tr <= 2 ||X||_tr ||Y||_inf, ||B||_inf <= w_x,
+    tr(A') <= 1, partial trace trace-norm contractive, and
+    max-abs-entry <= trace norm. The bound is exact bookkeeping, not a
+    first-order estimate; dtype rounding (ensemble_dtype) is NOT
+    covered by it. rank_tol=0/rank_cap=None/ensemble_dtype=None runs
+    the pre-approx code path verbatim and reports bound 0.0.
     """
-    if engine == "dense":
-        return dense_ref.update_matrices(params, phi_in, phi_out, widths,
-                                         eta, weights=weights)
-    if engine == "local_opb":
-        return _update_matrices_opb(params, phi_in, phi_out, widths, eta,
-                                    impl=impl, weights=weights)
+    approx = ql.resolve_approx(rank_tol, rank_cap, ensemble_dtype)
+    rdt = ql.real_dtype(ql.default_dtype())
+    if engine in ("dense", "local_opb"):
+        if approx is not None:
+            raise ValueError(
+                "approximate rank (rank_tol/rank_cap/ensemble_dtype) is "
+                f"engine='local' only; engine={engine!r} is an exact "
+                "oracle/baseline")
+        if engine == "dense":
+            ks = dense_ref.update_matrices(params, phi_in, phi_out,
+                                           widths, eta, weights=weights)
+        else:
+            ks = _update_matrices_opb(params, phi_in, phi_out, widths,
+                                      eta, impl=impl, weights=weights)
+        if with_bound:
+            return ks, jnp.zeros((), rdt)
+        return ks
     if engine != "local":
         raise ValueError(f"unknown engine {engine!r}")
 
-    vs = feedforward_ensemble(params, phi_in, widths, compress=True)
+    if approx is None:
+        vs = feedforward_ensemble(params, phi_in, widths, compress=True)
+        errs_a = None
+    else:
+        vs, errs_a = feedforward_ensemble(params, phi_in, widths,
+                                          compress=True, approx=approx,
+                                          with_err=True)
     sv, denom = _weighted_label_ensemble(phi_out, weights)
+    if approx is not None:
+        sv = ql.ensemble_store(sv, approx)
+    err_b = jnp.zeros(phi_out.shape[:-1], rdt)
+    wv = (jnp.ones(phi_out.shape[:-1], rdt) if weights is None
+          else weights.astype(rdt))
+    bound = jnp.zeros((), rdt)
+
+    # A chains as ensemble vectors: A_j = sum_e |a_e,j><a_e,j| with
+    # a_j = U_j ... U_1 (v^{l-1} ⊗ |0..0>); built up front so
+    # equal-width layers share ONE vmapped peel per perceptron index,
+    # and the per-perceptron state stacks feed ONE batched trace
+    # contraction per layer.
+    a_chains = _a_chains(params, vs, widths, approx=approx)
 
     ks_rev: Params = []
     for l in range(len(widths) - 1, 0, -1):
         us = params[l - 1]
         m_in, m_out = widths[l - 1], widths[l]
         n = m_in + m_out
-        if sv.shape[-2] > sv.shape[-1]:
-            sv = ql.ensemble_compress(sv)
+        if approx is None:
+            if sv.shape[-2] > sv.shape[-1]:
+                sv = ql.ensemble_compress(sv)
+            us_c = us
+        else:
+            target = min(sv.shape[-1], approx.rank_cap or sv.shape[-1])
+            if sv.shape[-2] > target:
+                sv, e = ql.ensemble_compress(sv, approx, with_err=True)
+                sv = ql.ensemble_store(sv, approx)
+                err_b = err_b + e.astype(rdt)
+            us_c = ql.ensemble_store(us, approx)
 
-        # A chain as ensemble vectors: A_j = sum_e |a_e,j><a_e,j| with
-        # a_j = U_j ... U_1 (v^{l-1} ⊗ |0..0>); the per-perceptron
-        # state stacks feed ONE batched trace contraction per layer.
-        av = _append_ancilla(vs[l - 1], m_out)
-        a_chain = []
-        for j in range(m_out):
-            av = ql.apply_unitary_vec(av, us[j], _acting(m_in, j), n)
-            a_chain.append(av)
-
+        a_chain = a_chains[l - 1]
         if impl == "pallas":
             # explicit B ensembles: GEMM-shaped Gram + fold + trace in
-            # the fused ensemble-commutator-trace kernel (MXU food)
+            # the fused ensemble-commutator-trace kernel (MXU food);
+            # out_dtype restores x64 at the kernel's trace boundary.
             t = ensemble_commutator_traces(
                 jnp.stack(a_chain), jnp.stack(_b_ensemble_chain(
-                    us, sv, m_in, m_out)), m_in, m_out, impl=impl)
+                    us, sv, m_in, m_out, approx=approx)), m_in, m_out,
+                impl=impl,
+                out_dtype=(None if approx is None or approx.dtype is None
+                           else ql.default_dtype()))
         else:
             # adjoint-applied form: y^{(j)}_e = B_j a^{(j)}_e via the
             # recursion y^{(j)} = U_{j+1}† y^{(j+1)}, seeded by
@@ -468,17 +693,31 @@ def update_matrices(params: Params, phi_in: jax.Array, phi_out: jax.Array,
             y = y.reshape(a_chain[-1].shape)
             y_chain = [y]
             for jj in range(m_out - 1, 0, -1):
-                y = ql.apply_unitary_vec(y, ql.dagger(us[jj]),
+                y = ql.apply_unitary_vec(y, ql.dagger(us_c[jj]),
                                          _acting(m_in, jj), n)
                 y_chain.append(y)
             y_chain = y_chain[::-1]  # y_chain[j] pairs with a_chain[j]
             t = _ensemble_pair_traces(a_chain, y_chain, m_in, m_out)
+            if approx is not None and approx.dtype is not None:
+                t = t.astype(ql.default_dtype())  # x64 @ trace boundary
 
         ks_rev.append((eta * (2.0 ** m_in) * 1j / denom)
                       * (t - ql.dagger(t)))
+        if approx is not None:
+            bound = bound + (eta * (2.0 ** m_in) / denom) * jnp.sum(
+                2.0 * (errs_a[l - 1] * wv + err_b))
         if l > 1:
-            sv = _sigma_step_ensemble(us, sv, m_in, m_out)
-    return ks_rev[::-1]
+            if approx is None:
+                sv = _sigma_step_ensemble(us, sv, m_in, m_out)
+            else:
+                sv, e = _sigma_step_ensemble(us, sv, m_in, m_out,
+                                             approx=approx,
+                                             with_err=True)
+                err_b = err_b + e.astype(rdt)
+    ks = ks_rev[::-1]
+    if with_bound:
+        return ks, bound
+    return ks
 
 
 def _ensemble_pair_traces(x_list: Sequence[jax.Array],
@@ -670,15 +909,21 @@ def cost_mse(params: Params, phi_in: jax.Array, phi_out: jax.Array,
     return jnp.mean(batched_mse(phi_out, rho_out, impl=impl))
 
 
-@functools.partial(jax.jit, static_argnames=("widths", "engine", "impl"))
+@functools.partial(jax.jit, static_argnames=("widths", "engine", "impl",
+                                             "rank_tol", "rank_cap",
+                                             "ensemble_dtype"))
 def local_step(params: Params, phi_in: jax.Array, phi_out: jax.Array,
                widths: Tuple[int, ...], eta, eps, *, engine: str = "local",
-               impl: str = "xla") -> Tuple[Params, Params]:
+               impl: str = "xla", rank_tol: float = 0.0,
+               rank_cap: Optional[int] = None,
+               ensemble_dtype: Optional[str] = None
+               ) -> Tuple[Params, Params]:
     """One QuanFedNode temporary-update step. Returns (new_params, Ks).
 
     eta/eps are traced operands (no recompile on hyperparameter sweeps);
-    only widths/engine/impl are static.
+    only widths/engine/impl and the approximate-rank knobs are static.
     """
     ks = update_matrices(params, phi_in, phi_out, widths, eta,
-                         engine=engine, impl=impl)
+                         engine=engine, impl=impl, rank_tol=rank_tol,
+                         rank_cap=rank_cap, ensemble_dtype=ensemble_dtype)
     return apply_updates(params, ks, eps, impl=impl), ks

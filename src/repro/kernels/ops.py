@@ -88,8 +88,8 @@ def mse(phi, rho, *, impl: str = "auto"):
     return ref.mse_ref(phi, rho)
 
 
-@functools.partial(jax.jit, static_argnames=("impl",))
-def ensemble_commutator_trace(a, b, *, impl: str = "auto"):
+@functools.partial(jax.jit, static_argnames=("impl", "out_dtype"))
+def ensemble_commutator_trace(a, b, *, impl: str = "auto", out_dtype=None):
     """T[j] = sum_n tr_rest(A_{j,n} B_{j,n}) for vector ensembles.
 
     a: (J, N, Ea, dk, dr), b: (J, N, Eb, dk, dr) complex in keep-major
@@ -97,17 +97,21 @@ def ensemble_commutator_trace(a, b, *, impl: str = "auto"):
     sum-of-outer-product densities. Returns (J, dk, dk) complex. The
     Pallas path fuses the cross Gram, re-expansion, and keep-axis trace
     in VMEM per (j, n) cell (fp32 accumulation, interpret mode off-TPU);
-    the xla path is the working-dtype einsum reference.
+    the xla path is the working-dtype einsum reference. out_dtype
+    (static, e.g. jnp.complex128) widens the trace OUTPUT at the kernel
+    boundary — the x64-restore point for reduced-storage ensembles.
     """
     use_pallas = impl == "pallas" or (impl == "auto" and _on_tpu())
+    odt = a.dtype if out_dtype is None else jnp.dtype(out_dtype)
     if use_pallas:
         j, n, ea, dk, dr = a.shape
         ar = a.reshape(j, n, ea, dk * dr)
         br = b.reshape(j, n, b.shape[2], dk * dr)
         tr, ti = _ect(jnp.real(ar), jnp.imag(ar), jnp.real(br),
-                      jnp.imag(br), d_keep=dk, interpret=not _on_tpu())
-        return (tr + 1j * ti).astype(a.dtype)
-    return ref.ensemble_commutator_trace_ref(a, b)
+                      jnp.imag(br), d_keep=dk, interpret=not _on_tpu(),
+                      out_dtype=jnp.finfo(odt).dtype)
+        return (tr + 1j * ti).astype(odt)
+    return ref.ensemble_commutator_trace_ref(a, b).astype(odt)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

@@ -164,14 +164,17 @@ def _ect_kernel(ar_ref, ai_ref, br_ref, bi_ref, tr_ref, ti_ref,
 
 
 def ensemble_commutator_trace(ar, ai, br, bi, *, d_keep: int,
-                              interpret: bool = False):
+                              interpret: bool = False, out_dtype=None):
     """Fused ensemble-vs-ensemble partial-trace product on split parts.
 
     ar, ai: (J, N, Ea, K); br, bi: (J, N, Eb, K) float, K = d_keep*d_rest
     in keep-major layout. Returns (tr, ti): (J, d_keep, d_keep) with
     T[j] = sum_n tr_rest(A_{j,n} B_{j,n}) — the Prop.-1 commutator trace
     input (K_j ~ T - T†), every D x D operator product replaced by three
-    ensemble-sized GEMMs fused in VMEM per grid cell.
+    ensemble-sized GEMMs fused in VMEM per grid cell. out_dtype (real,
+    e.g. float64) widens the trace output relative to the input split
+    parts — the final accumulator cast happens inside the kernel, so
+    reduced-storage ensembles restore x64 exactly at this boundary.
     """
     j, n, ea, k = ar.shape
     grid = (j, n)
@@ -179,7 +182,9 @@ def ensemble_commutator_trace(ar, ai, br, bi, *, d_keep: int,
     spec_b = pl.BlockSpec((1, 1, br.shape[2], k),
                           lambda jj, nn: (jj, nn, 0, 0))
     out_spec = pl.BlockSpec((1, d_keep, d_keep), lambda jj, nn: (jj, 0, 0))
-    out_shape = [jax.ShapeDtypeStruct((j, d_keep, d_keep), ar.dtype)] * 2
+    out_shape = [jax.ShapeDtypeStruct(
+        (j, d_keep, d_keep), ar.dtype if out_dtype is None else out_dtype)
+    ] * 2
     tr, ti = pl.pallas_call(
         functools.partial(_ect_kernel, d_keep=d_keep),
         grid=grid,

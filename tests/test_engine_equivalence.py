@@ -293,6 +293,181 @@ def test_apply_updates_grouped_matches_per_layer(x64):
     assert _max_err(applied, want_a) <= 1e-12
 
 
+# ------------------------------------------- certified approximate rank
+APPROX_KNOBS = [dict(rank_cap=2), dict(rank_tol=0.2),
+                dict(rank_tol=0.05, rank_cap=3)]
+
+
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+def test_rank_tol_zero_is_bit_exact(x64, widths):
+    """rank_tol=0 (all approx knobs at defaults) must reproduce the
+    exact engine BIT-for-bit — the approx kwargs resolve to the
+    pre-existing code path, not a numerically-close one."""
+    params, phi_in, phi_out = _rand_problem(19, widths)
+    base = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0)
+    ks, bound = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    rank_tol=0.0, rank_cap=None,
+                                    ensemble_dtype=None, with_bound=True)
+    assert float(bound) == 0.0
+    for a, b in zip(base, ks):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("knobs", APPROX_KNOBS)
+@pytest.mark.parametrize("widths", WIDTH_CASES)
+def test_certified_bound_dominates_deviation(x64, widths, knobs):
+    """The accumulated certificate must upper-bound the measured max-abs
+    deviation of the approximate update matrices vs the dense oracle."""
+    params, phi_in, phi_out = _rand_problem(29, widths)
+    ks, bound = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    with_bound=True, **knobs)
+    dev = float(dense_ref.oracle_deviation(ks, params, phi_in, phi_out,
+                                           widths, 1.0))
+    assert dev <= float(bound) + 1e-12, (dev, float(bound))
+
+
+def test_certified_bound_dominates_deviation_weighted(x64):
+    """Same certificate-dominance property through the weighted Prop.-1
+    average (zero-weight padding slot included)."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(37, widths, n=6)
+    w = jax.random.uniform(jax.random.PRNGKey(38), (6,),
+                           dtype=jnp.float64)
+    w = w.at[0].set(0.0)
+    ks, bound = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    weights=w, rank_tol=0.05, rank_cap=3,
+                                    with_bound=True)
+    dev = float(dense_ref.oracle_deviation(ks, params, phi_in, phi_out,
+                                           widths, 1.0, weights=w))
+    assert float(bound) > 0.0
+    assert dev <= float(bound) + 1e-12, (dev, float(bound))
+
+
+def test_approx_engine_guard_raises(x64):
+    """Only the certified local engine accepts the approx knobs."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(43, widths)
+    for engine in ("dense", "local_opb"):
+        with pytest.raises(ValueError):
+            qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                engine=engine, rank_cap=2)
+    with pytest.raises(ValueError):
+        ql.resolve_approx(0.0, None, "f16")  # unknown storage dtype
+    with pytest.raises(ValueError):
+        ql.resolve_approx(-0.1, None, None)
+
+
+@settings(deadline=None, max_examples=15)
+@given(seed=st.integers(0, 2**31 - 1), data=st.data())
+def test_compress_error_monotone_in_rank_tol_property(seed, data):
+    """Hypothesis: at the linalg level the certified truncation error is
+    exact (trace-norm deviation == sum of dropped s_i^2, within fp) and
+    monotone non-decreasing in rank_tol, for random ensembles (x64)."""
+    prev = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        n = data.draw(st.integers(1, 3))
+        rank = data.draw(st.integers(2, 2 ** n + 3))
+        tols = sorted(data.draw(st.lists(st.floats(0.001, 0.999),
+                                         min_size=2, max_size=4)))
+        v = ql.haar_state(jax.random.PRNGKey(seed), n, (rank,))
+        rho = qnn.density_from_ensemble(v)
+        errs = []
+        for tol in tols:
+            approx = ql.resolve_approx(tol, None, None)
+            vc, err = ql.ensemble_compress(v, approx=approx,
+                                           with_err=True)
+            errs.append(float(err))
+            # the certificate is exact: trace-norm of the dropped PSD
+            # mass equals the tracked bound (dropped rows are PSD)
+            drop = rho - qnn.density_from_ensemble(vc)
+            tn = float(jnp.sum(jnp.abs(jnp.linalg.eigvalsh(drop))))
+            assert tn <= float(err) + 1e-10, (tn, float(err))
+        for lo, hi in zip(errs, errs[1:]):
+            assert lo <= hi + 1e-12, (tols, errs)
+    finally:
+        jax.config.update("jax_enable_x64", prev)
+
+
+def test_bound_ladder_monotone_end_to_end(x64):
+    """Fixed-seed end-to-end ladder: tightening rank_tol must not grow
+    the certificate, and the exact rung is exactly zero."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(47, widths)
+    bounds = []
+    for tol in (0.0, 1e-8, 1e-3, 0.1, 0.5):
+        _, bound = qnn.update_matrices(params, phi_in, phi_out, widths,
+                                       1.0, rank_tol=tol, with_bound=True)
+        bounds.append(float(bound))
+    assert bounds[0] == 0.0
+    for lo, hi in zip(bounds, bounds[1:]):
+        assert lo <= hi + 1e-12, bounds
+
+
+@pytest.mark.parametrize("dtype,tol", [("f32", 1e-5), ("bf16", 5e-2)])
+def test_ensemble_storage_dtypes(x64, dtype, tol):
+    """Reduced ensemble storage: K stays complex128 (x64 restored at the
+    trace boundary) and the deviation vs dense is at storage precision.
+    NOTE: dtype rounding is NOT covered by the certificate."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(53, widths)
+    ks, bound = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    ensemble_dtype=dtype, with_bound=True)
+    assert float(bound) == 0.0  # no ranks dropped -> no certified error
+    for k in ks:
+        assert k.dtype == jnp.complex128
+    dev = float(dense_ref.oracle_deviation(ks, params, phi_in, phi_out,
+                                           widths, 1.0))
+    assert dev <= tol, dev
+
+
+def test_approx_pallas_matches_xla(x64):
+    """The approximate engine through the fused pallas kernel: K parity
+    at kernel tolerance and IDENTICAL certificates (the bound is pure
+    linalg, outside the kernel)."""
+    widths = (2, 3, 2)
+    params, phi_in, phi_out = _rand_problem(59, widths)
+    knobs = dict(rank_tol=0.05, rank_cap=3, with_bound=True)
+    ks_x, b_x = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    impl="xla", **knobs)
+    ks_p, b_p = qnn.update_matrices(params, phi_in, phi_out, widths, 1.0,
+                                    impl="pallas", **knobs)
+    assert _max_err(ks_p, ks_x) <= 1e-5
+    assert float(b_x) == float(b_p)
+
+
+def test_server_round_certified(x64):
+    """fed.server_round_certified: exact cfg -> zero bound + bit-parity
+    with the plain round; approx cfg -> positive bound that dominates
+    nothing broken (params still finite unitaries)."""
+    widths = (2, 3, 2)
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(61), 2,
+                                            num_nodes=3, n_per_node=3,
+                                            n_test=4)
+    params = qnn.init_params(jax.random.PRNGKey(62), widths)
+    base = dict(widths=widths, num_nodes=3, nodes_per_round=2,
+                interval_length=2, eps=0.05)
+    key = jax.random.PRNGKey(63)
+    cfg = fed.QuantumFedConfig(**base)
+    p_plain = fed.server_round(params, ds, key, cfg)
+    p_cert, smom, bound = fed.server_round_certified(params, ds, key, cfg)
+    assert smom is None and float(bound) == 0.0
+    for a, b in zip(p_plain, p_cert):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    cfg_a = fed.QuantumFedConfig(**base, rank_tol=1e-3, rank_cap=2)
+    p_apx, _, bound_a = fed.server_round_certified(params, ds, key, cfg_a)
+    assert float(bound_a) > 0.0
+    for p in p_apx:
+        assert bool(jnp.all(jnp.isfinite(jnp.abs(p))))
+    # phased protocol carries the same per-node certificates
+    sel, _, weights = fed.select_phase(ds, key, cfg_a)
+    _, bounds = fed.local_phase(params, ds, sel, key, cfg_a,
+                                with_bound=True)
+    assert bounds.shape == (2,)
+    assert float(jnp.sum(bounds)) > 0.0
+
+
 def test_eigh_factor_reuse_matches_expm(x64):
     """aggregate_product from the node pass's cached eigh factors must
     match the recomputed-eigh path <= 1e-10 (upload-scale reuse)."""

@@ -60,6 +60,27 @@ def test_spec_validation_fails_loud():
         api.QuantumSubstrate(small_quantum_spec(), dataset=ds)
 
 
+def test_spec_approx_rank_knobs():
+    """Certified approximate-rank knobs: round-trip through JSON and the
+    legacy converters, and fail loud off the certified local engine."""
+    spec = small_quantum_spec(rank_tol=1e-3, rank_cap=4,
+                              ensemble_dtype="f32")
+    again = api.FedSpec.from_json(spec.to_json())
+    assert again == spec
+    qcfg = spec.to_quantum_config()
+    assert (qcfg.rank_tol, qcfg.rank_cap, qcfg.ensemble_dtype) == \
+        (1e-3, 4, "f32")
+    back = api.FedSpec.from_quantum_config(qcfg)
+    assert (back.rank_tol, back.rank_cap, back.ensemble_dtype) == \
+        (1e-3, 4, "f32")
+    with pytest.raises(ValueError, match="local"):
+        small_quantum_spec(engine="dense", rank_cap=2)
+    with pytest.raises(ValueError, match="quantum-only"):
+        api.FedSpec.classical(arch="qwen1.5-4b", rank_tol=0.1)
+    with pytest.raises(ValueError, match="ensemble_dtype"):
+        small_quantum_spec(ensemble_dtype="f16")
+
+
 def test_spec_json_roundtrip():
     for spec in (small_quantum_spec(node_sizes=(2, 3, 4, 5),
                                     upload_noise=0.5,
