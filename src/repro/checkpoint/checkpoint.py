@@ -3,13 +3,23 @@
 Flat-dict params map 1:1 onto npz keys ('/' is legal in npz names).
 Sharding metadata (PartitionSpec strings per param) and the training
 step are stored alongside so a restore onto a different mesh re-shards
-via device_put. Writes are atomic (tmp + rename).
+via device_put.
+
+Crash safety: writes go to a temp file in the target directory, are
+fsynced, then atomically renamed over the destination (with a
+best-effort directory fsync), so a kill at ANY point leaves either the
+old complete checkpoint or the new complete one — never a torn file
+under the real name — and a failed write cleans its temp file up.
+``restore`` converts a torn/truncated file (e.g. a checkpoint copied
+off a machine that died mid-write, before the rename) into a
+``ValueError`` naming the path instead of a raw zip traceback.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import zipfile
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -86,22 +96,58 @@ def save(path: str, params: Dict[str, jax.Array], *, step: int = 0,
     meta_blob = json.dumps(meta).encode()
     arrays[_META_KEY] = np.frombuffer(meta_blob, dtype=np.uint8)
     d = os.path.dirname(os.path.abspath(path))
-    with tempfile.NamedTemporaryFile(dir=d, suffix=".npz",
-                                     delete=False) as f:
-        np.savez(f, **arrays)
-        tmp = f.name
-    os.replace(tmp, path)
-    with tempfile.NamedTemporaryFile(dir=d, suffix=".json", mode="w",
-                                     delete=False) as f:
-        json.dump(meta, f)
-        tmp = f.name
-    os.replace(tmp, path + ".meta.json")
+    _atomic_write(path, d, ".npz",
+                  lambda f: np.savez(f, **arrays))
+    _atomic_write(path + ".meta.json", d, ".json",
+                  lambda f: f.write(json.dumps(meta).encode()))
+
+
+def _atomic_write(path: str, d: str, suffix: str, write) -> None:
+    """tmp-in-same-dir -> write -> flush+fsync -> rename; the temp file
+    is unlinked if anything before the rename fails, and the directory
+    entry is fsynced after it (best effort — not all filesystems allow
+    directory fds) so the rename itself survives a power cut."""
+    tmp = None
+    try:
+        with tempfile.NamedTemporaryFile(dir=d, suffix=suffix,
+                                         delete=False) as f:
+            tmp = f.name
+            write(f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        tmp = None
+    finally:
+        if tmp is not None and os.path.exists(tmp):
+            os.unlink(tmp)
+    try:
+        dfd = os.open(d, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(dfd)
+    except OSError:
+        pass
+    finally:
+        os.close(dfd)
 
 
 def restore(path: str, shardings: Optional[Dict[str, Any]] = None
             ) -> Tuple[Dict[str, jax.Array], Dict[str, Any]]:
-    with np.load(path) as z:
-        arrays = {k: z[k] for k in z.files}
+    try:
+        with np.load(path) as z:
+            arrays = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise
+    except (zipfile.BadZipFile, EOFError, OSError, ValueError,
+            KeyError) as e:
+        # a truncated/torn npz (copy of a mid-write temp file, partial
+        # download, disk-full tail) fails as a corrupt zip member —
+        # name the file instead of leaking the zip internals
+        raise ValueError(
+            f"{path} is torn or not a checkpoint (atomic saves never "
+            f"leave one under the real name — was this a partial "
+            f"copy?): {e}") from e
     meta = {"step": 0, "extra": {}, "specs": {}, "dtypes": {}}
     if _META_KEY in arrays:  # authoritative (atomic with the arrays)
         meta = json.loads(arrays.pop(_META_KEY).tobytes().decode())

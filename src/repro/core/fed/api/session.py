@@ -34,7 +34,7 @@ from repro.core.fed.api.scheduler import Scheduler, make_scheduler
 from repro.core.fed.api.spec import FedSpec
 from repro.core.fed.api.substrate import Substrate, make_substrate
 
-CKPT_FORMAT = 2  # 2: + scheduler state ("sched/..."); readable as 1
+CKPT_FORMAT = 3  # 3: + "round" counter leaf; readable as 2 / 1
 
 
 def sequential_split_plan(key: jax.Array, rounds: int) -> jax.Array:
@@ -179,7 +179,7 @@ class FederationSession:
         self.substrate = substrate
         self.key = jnp.asarray(key)
         self.state = state
-        self.round = int(round)
+        self.round = round
         self.history: Dict[str, list] = history if history is not None \
             else {}
         self.round_keys = None if round_keys is None else \
@@ -228,8 +228,12 @@ class FederationSession:
             {k[len("state/"):]: v for k, v in flat.items()
              if k.startswith("state/")})
         plan = flat.get("rng/plan")
+        # the round counter is a state LEAF (format 3); older
+        # checkpoints carry it only as the npz metadata step
+        rnd = (int(np.asarray(flat["round"])) if "round" in flat
+               else int(meta.get("step", 0)))
         sess = cls(spec, substrate, key=flat["rng/base"], state=state,
-                   round=int(meta.get("step", 0)),
+                   round=rnd,
                    history={k: list(v)
                             for k, v in extra.get("history", {}).items()},
                    round_keys=plan)
@@ -238,6 +242,39 @@ class FederationSession:
             {k[len("sched/"):]: v for k, v in flat.items()
              if k.startswith("sched/")})
         return sess
+
+    # -- per-session state as a pure pytree -----------------------------
+    # The round counter is a CHECKPOINTABLE LEAF (np.int32), not a bare
+    # Python int: together with the RNG base key and the substrate's
+    # state_flat, the whole per-session state is a pure pytree — which
+    # is what lets the serving layer (repro.core.fed.serve) stack many
+    # sessions on a leading axis and what rides in the checkpoint tree
+    # itself (no longer only in the npz metadata).
+    @property
+    def round(self) -> int:
+        return int(self._round)
+
+    @round.setter
+    def round(self, value) -> None:
+        self._round = np.int32(value)
+
+    def state_pytree(self) -> Dict[str, Any]:
+        """The session's complete evolving state as ONE pure pytree:
+        substrate state leaves + RNG base key (+ optional round-key
+        plan) + round counter + in-flight scheduler state. This is the
+        exact tree ``save`` writes; spec / history / wall-time are
+        metadata, not state."""
+        tree: Dict[str, Any] = {
+            "state": self.substrate.state_flat(self.state),
+            "rng": {"base": np.asarray(self.key)},
+            "round": np.asarray(self._round),
+        }
+        if self.round_keys is not None:
+            tree["rng"]["plan"] = np.asarray(self.round_keys)
+        sched = self.scheduler.state_flat()
+        if sched:  # in-flight uploads ride in the checkpoint
+            tree["sched"] = sched
+        return tree
 
     # -- driving --------------------------------------------------------
     def round_key(self, t: int) -> jax.Array:
@@ -301,17 +338,10 @@ class FederationSession:
 
     # -- persistence ----------------------------------------------------
     def save(self, path: str) -> None:
-        """Write spec + round + RNG state + substrate state through
-        ``repro.checkpoint`` (atomic npz + json sidecar)."""
-        tree: Dict[str, Any] = {
-            "state": self.substrate.state_flat(self.state),
-            "rng": {"base": np.asarray(self.key)},
-        }
-        if self.round_keys is not None:
-            tree["rng"]["plan"] = np.asarray(self.round_keys)
-        sched = self.scheduler.state_flat()
-        if sched:  # in-flight uploads ride in the checkpoint
-            tree["sched"] = sched
+        """Write spec + the session state pytree (round counter and RNG
+        included as leaves) through ``repro.checkpoint`` (atomic,
+        fsynced npz + json sidecar)."""
+        tree = self.state_pytree()
         extra = {
             "fed_spec": self.spec.to_json_dict(),
             "history": self.history,

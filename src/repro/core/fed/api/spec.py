@@ -20,6 +20,7 @@ converters both ways.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Dict, Optional, Tuple
 
@@ -32,6 +33,17 @@ SUBSTRATES = ("quantum", "classical")
 
 # fields whose JSON lists must come back as tuples
 _TUPLE_FIELDS = ("widths", "node_sizes")
+
+# fields that do NOT key a serving group (``fingerprint``): traced
+# hyperparameters and data CONTENT. Everything structural — widths,
+# cohort shape, strategy names, engine/impl/rank knobs, node sizes —
+# stays in the key, so two specs with equal fingerprints trace to the
+# SAME compiled round and their sessions can run stacked (data shapes
+# are pinned by num_nodes / n_per_node / node_sizes / widths; seeds,
+# noise ratio and iid-ness only change array VALUES).
+_NON_GROUPING_FIELDS = ("eta", "eps", "server_momentum", "data_seed",
+                        "data_noise", "data_iid", "latency_seed",
+                        "n_test", "eval_batch")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +214,24 @@ class FedSpec:
     def classical(cls, arch: str, **kw) -> "FedSpec":
         """A classical (LM / pytree-model) federation spec."""
         return cls(substrate="classical", arch=arch, **kw)
+
+    # -- grouping -------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Stable hex digest over the group-relevant fields — the key
+        ``repro.core.fed.serve.groups`` batches sessions by. Two specs
+        with equal fingerprints describe the same compiled federation
+        round (same structure, shapes and registry strategies) and may
+        differ only in traced hyperparameters (eta / eps /
+        server_momentum) and data content (seeds, noise, iid-ness, test
+        size) — exactly what ``server_round_stacked`` lets tenants of
+        one group vary. Survives the JSON round-trip: ``from_json(
+        to_json()).fingerprint() == fingerprint()``."""
+        d = self.to_json_dict()
+        d.pop("version")
+        for f in _NON_GROUPING_FIELDS:
+            d.pop(f)
+        blob = json.dumps(d, sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     # -- JSON round-trip ------------------------------------------------
     def to_json_dict(self) -> Dict[str, Any]:

@@ -257,6 +257,36 @@ class QuantumSubstrate:
                else None)
         return self._pack(params, smom, err)
 
+    # -- serving (stacked multi-tenant rounds) --------------------------
+    def smom_zeros(self, params):
+        """The zero server-momentum state, materialized: per layer
+        (I_l,) + params[l].shape — the shape of the averaged generators
+        K̄_k the momentum recursion runs on. Numerically identical to
+        the lazy ``None`` round-0 state (``generator_step`` treats None
+        as zeros), but structure-stable, so stacked session states keep
+        one pytree shape whatever round each tenant is at."""
+        il = self.spec.interval_length
+        return [jnp.zeros((il,) + p.shape, p.dtype) for p in params]
+
+    def state_parts(self, state):
+        """``(params, smom, err_bound)`` in a STRUCTURE-STABLE form —
+        what the serving layer stacks over the session axis: ``smom``
+        is materialized via ``smom_zeros`` when the spec carries a
+        server optimizer but no momentum has accumulated yet, ``smom``
+        / ``err_bound`` are None exactly when the spec never tracks
+        them. ``pack_state`` is the inverse."""
+        params = self._params_of(state)
+        smom = self._smom_of(state)
+        if self.spec.server_opt != "none" and smom is None:
+            smom = self.smom_zeros(params)
+        err = self._err_of(state) if self._certified else None
+        return params, smom, err
+
+    def pack_state(self, params, smom=None, err_bound=None):
+        """Rebuild a session state from ``state_parts`` output (public
+        face of ``_pack`` for the serving layer)."""
+        return self._pack(params, smom, err_bound)
+
 
 class ClassicalSubstrate:
     """QuanFedPS's classical limit: I_l local optimizer steps per node +

@@ -27,6 +27,16 @@ Schedules:
 ``sample_nodes`` returns ``(sel, mask)``: ``sel`` the (N_p,) selected
 node indices and ``mask`` a (N_p,) float32 participation mask (1.0 =
 update counted, 0.0 = dropped). All schedules are jit-traceable.
+
+Cost: the uniform draw (and dropout's, which reuses it) is
+O(sampled), not O(total) — ``jax.random.choice(replace=False)``
+permutes all N nodes, which a 10k-tenant serving group or a
+million-node cohort pays every round, so past ``SAMPLED_MIN`` nodes
+(or with ``method="sampled"``) the draw switches to Floyd's O(N_p^2)
+subset sampler plus an N_p-permutation. Below the threshold the
+original ``choice`` call runs verbatim (bit-compatible with the
+pre-registry code). "weighted" still materializes the O(N) probability
+vector — size-aware sampling needs every N_n.
 """
 from __future__ import annotations
 
@@ -37,6 +47,13 @@ import jax.numpy as jnp
 
 SCHEDULES = ("uniform", "weighted", "dropout", "full")
 
+# node count past which the uniform draw stops paying O(total): the
+# O(N_p^2) Floyd sampler takes over (unless nodes_per_round is so large
+# that the dense permutation is cheaper anyway)
+SAMPLED_MIN = 4096
+
+_METHODS = ("auto", "dense", "sampled")
+
 
 def validate(schedule: str) -> str:
     if schedule not in SCHEDULES:
@@ -45,15 +62,59 @@ def validate(schedule: str) -> str:
     return schedule
 
 
+def _floyd_choice(key: jax.Array, num_nodes: int, k: int) -> jax.Array:
+    """Uniform k-of-n WITHOUT materializing O(n) state: Floyd's subset
+    sampler — for i = 0..k-1 draw t uniform on [0, n-k+i]; if t was
+    already taken, take n-k+i itself (fresh by construction). O(k^2)
+    work and memory, uniform over k-subsets; a final k-permutation
+    makes the ORDER uniform too (the dense ``choice`` also returns a
+    random order, and product-combine aggregation applies updates in
+    ``sel`` order)."""
+    k_draw, k_perm = jax.random.split(key)
+    draw_keys = jax.random.split(k_draw, k)
+    dt = jnp.result_type(int)  # match the dense choice's index dtype
+
+    def body(i, sel):
+        j = num_nodes - k + i
+        t = jax.random.randint(draw_keys[i], (), 0, j + 1, dtype=dt)
+        dup = jnp.any(sel == t)
+        return sel.at[i].set(jnp.where(dup, j, t))
+
+    sel = jax.lax.fori_loop(0, k, body, jnp.full((k,), -1, dt))
+    return jax.random.permutation(k_perm, sel)
+
+
+def _uniform_choice(key: jax.Array, num_nodes: int, nodes_per_round: int,
+                    method: str) -> jax.Array:
+    """The uniform without-replacement draw under a cost method:
+    "dense" = the original full-permutation ``jax.random.choice``
+    (bit-compatible with the pre-registry inline call), "sampled" =
+    Floyd, "auto" = dense below ``SAMPLED_MIN`` nodes (so existing
+    frozen-parity runs are untouched), Floyd above it when the subset
+    is small enough for O(N_p^2) to win."""
+    if method not in _METHODS:
+        raise ValueError(f"unknown sampling method {method!r}; "
+                         f"registered: {list(_METHODS)}")
+    if method == "auto":
+        method = ("sampled" if num_nodes >= SAMPLED_MIN
+                  and nodes_per_round ** 2 < num_nodes else "dense")
+    if method == "dense":
+        return jax.random.choice(key, num_nodes, (nodes_per_round,),
+                                 replace=False)
+    return _floyd_choice(key, num_nodes, nodes_per_round)
+
+
 def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
                  schedule: str = "uniform",
                  node_sizes: Optional[jax.Array] = None,
-                 dropout_rate: float = 0.0
+                 dropout_rate: float = 0.0, method: str = "auto"
                  ) -> Tuple[jax.Array, jax.Array]:
     """Alg. 2 node selection under a participation schedule.
 
     node_sizes: (num_nodes,) per-node data volumes N_n; required by the
     "weighted" schedule, ignored otherwise.
+    method: uniform-draw cost policy — "auto" | "dense" | "sampled"
+    (see ``_uniform_choice``; "weighted" is always dense).
     Returns (sel, mask) as documented in the module docstring.
     """
     validate(schedule)
@@ -67,8 +128,7 @@ def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
                 f"({nodes_per_round}) == num_nodes ({num_nodes})")
         return jnp.arange(num_nodes), ones
     if schedule == "uniform":
-        sel = jax.random.choice(key, num_nodes, (nodes_per_round,),
-                                replace=False)
+        sel = _uniform_choice(key, num_nodes, nodes_per_round, method)
         return sel, ones
     if schedule == "weighted":
         if node_sizes is None:
@@ -80,8 +140,7 @@ def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
         return sel, ones
     # dropout: uniform selection, then independent straggler masking
     k_sel, k_drop = jax.random.split(key)
-    sel = jax.random.choice(k_sel, num_nodes, (nodes_per_round,),
-                            replace=False)
+    sel = _uniform_choice(k_sel, num_nodes, nodes_per_round, method)
     mask = (jax.random.uniform(k_drop, (nodes_per_round,))
             >= dropout_rate).astype(jnp.float32)
     return sel, mask

@@ -1,0 +1,19 @@
+"""Multi-tenant federation serving (see ``server`` module docstring).
+
+``FederationServer`` drives thousands of concurrent
+``FederationSession`` tenants on one mesh: same-fingerprint quantum
+sessions execute their rounds as ONE stacked/vmapped ``server_round``
+call (``groups``), continuous-batching admission keeps a fixed grid of
+compiled slots full (``admission``), and an LRU checkpoint store parks
+cold sessions to disk with bit-exact revival (``store``).
+"""
+from repro.core.fed.serve.admission import SlotGrid
+from repro.core.fed.serve.groups import (SequentialGroup, StackedGroup,
+                                         group_key, group_mode)
+from repro.core.fed.serve.server import FederationServer
+from repro.core.fed.serve.store import CheckpointStore
+
+__all__ = [
+    "FederationServer", "CheckpointStore", "SlotGrid", "StackedGroup",
+    "SequentialGroup", "group_key", "group_mode",
+]

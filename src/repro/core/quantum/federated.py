@@ -49,6 +49,12 @@ composition, fused under ONE jit so sync training keeps its single
 compiled round; schedulers that interleave rounds (async buffering,
 overlapped dispatch) call the per-phase entry points, each jitted on
 its own.
+
+Multi-tenant serving: ``server_round_stacked`` vmaps the SAME round
+body over a leading session axis, so a ``FederationServer``
+(``repro.core.fed.serve``) drives every tenant of a group — same
+structural config, own data/keys/hyperparameters — as one compiled
+stacked round instead of S dispatches.
 """
 from __future__ import annotations
 
@@ -354,11 +360,10 @@ def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
     return new_params, new_smom
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "server_opt"))
-def _server_round(params: qnn.Params, smom, dataset: QuantumDataset,
-                  key: jax.Array, eta, eps, server_beta,
-                  cfg: QuantumFedConfig, mesh=None,
-                  server_opt: str = "none"):
+def _server_round_impl(params: qnn.Params, smom, dataset: QuantumDataset,
+                       key: jax.Array, eta, eps, server_beta,
+                       cfg: QuantumFedConfig, mesh=None,
+                       server_opt: str = "none"):
     """Returns ``(new_params, new_smom, err_bound)`` — err_bound is the
     round's accumulated approximation-error certificate (the per-node
     bounds combined with the aggregation weights; a 0.0 scalar for exact
@@ -385,6 +390,58 @@ def _server_round(params: qnn.Params, smom, dataset: QuantumDataset,
     err_bound = (jnp.sum(weights.astype(rdt) * bounds.astype(rdt))
                  if certify else jnp.zeros((), rdt))
     return new_params, new_smom, err_bound
+
+
+_server_round = functools.partial(
+    jax.jit, static_argnames=("cfg", "mesh", "server_opt"))(
+        _server_round_impl)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "server_opt"))
+def _server_round_stacked(params, smom, dataset, keys, eta, eps,
+                          server_beta, cfg, server_opt):
+    body = lambda p, sm, ds, k, et, ep, sb: _server_round_impl(
+        p, sm, ds, k, et, ep, sb, cfg, None, server_opt)
+    return jax.vmap(body)(params, smom, dataset, keys, eta, eps,
+                          server_beta)
+
+
+def server_round_stacked(params: qnn.Params, dataset: QuantumDataset,
+                         keys: jax.Array, cfg: QuantumFedConfig, *,
+                         smom=None, eta=None, eps=None,
+                         server_opt: str = "none", server_beta=None):
+    """One QuanFedPS round for a STACK of independent federations — the
+    multi-tenant serving hot path (``repro.core.fed.serve``).
+
+    Every traced argument carries a leading session axis S: ``params``
+    is the usual per-layer list with each layer (S, m_l, d, d),
+    ``dataset`` stacks each tenant's ``QuantumDataset`` (so tenants keep
+    their own target unitaries and node data), ``keys`` is (S, 2) — one
+    round key per session. ``eta`` / ``eps`` / ``server_beta`` may be
+    scalars or (S,) vectors: they are TRACED, so tenants in one group
+    may run different hyperparameters against the same compiled round
+    (the group key — ``FedSpec.fingerprint()`` — excludes them). The
+    structural cfg must be identical across the stack; fan-out is forced
+    to "vmap" (a pod mesh shards nodes WITHIN one federation, not across
+    tenants). Returns ``(new_params, new_smom, err_bounds)`` with the
+    same leading axis; numerics match S independent ``server_round``
+    calls to jit-boundary rounding (<= 1e-10 under x64 — gated in
+    ``tests/test_fed_serve.py``).
+    """
+    fserver_opt.validate(server_opt)
+    strategies.get_aggregation(cfg.aggregation)   # fail loudly pre-trace
+    participation.validate(cfg.participation)
+    static_cfg = cfg._replace(eta=0.0, eps=0.0, fanout="vmap")
+    s = jnp.shape(keys)[0]
+    rdt = ql.real_dtype(ql.default_dtype())
+
+    def vec(v, default):
+        v = default if v is None else v
+        return jnp.broadcast_to(jnp.asarray(v, rdt), (s,))
+
+    return _server_round_stacked(
+        params, smom, dataset, jnp.asarray(keys), vec(eta, cfg.eta),
+        vec(eps, cfg.eps), vec(server_beta, 0.9), static_cfg, server_opt)
 
 
 def _resolve_fanout(cfg: QuantumFedConfig) -> str:

@@ -1,0 +1,296 @@
+"""Multi-tenant serving gates (``repro.core.fed.serve``).
+
+The contracts that make a ``FederationServer`` trustworthy:
+
+* served == solo: a tenant driven on a busy stacked grid ends bit-close
+  (≤1e-10 under x64) to the same session stepped alone, across mixed
+  specs and per-tenant hyperparameters;
+* park → evict → revive mid-run is BIT-exact;
+* admission is deterministic: replaying a submission sequence
+  reproduces slot assignments and final states exactly;
+* ``FedSpec.fingerprint`` groups what must stack together and survives
+  the JSON round-trip;
+* torn checkpoints are detected, failed saves leave the old file.
+"""
+import dataclasses
+import glob
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.core.fed.api.session import FederationSession
+from repro.core.fed.api.spec import FedSpec
+from repro.core.fed.serve import (CheckpointStore, FederationServer,
+                                  SlotGrid, group_key, group_mode)
+
+SPEC = FedSpec.quantum((2, 3, 2), num_nodes=4, nodes_per_round=2,
+                       n_per_node=4, interval_length=2, n_test=4)
+
+
+def _params_of(sess):
+    return sess.substrate.state_parts(sess.state)[0]
+
+
+def _max_diff(a, b):
+    return max(float(np.abs(np.asarray(x) - np.asarray(y)).max())
+               for x, y in zip(a, b))
+
+
+# -- fingerprint grouping (spec-level, no serving needed) ---------------
+
+def test_fingerprint_stable_and_json_roundtrip():
+    fp = SPEC.fingerprint()
+    assert fp == SPEC.fingerprint()
+    assert FedSpec.from_json(SPEC.to_json()).fingerprint() == fp
+
+
+def test_fingerprint_ignores_traced_fields_only():
+    # traced hyperparameters / data content don't split a group...
+    for kw in ({"eta": 2.0}, {"eps": 0.5}, {"data_seed": 7},
+               {"server_momentum": 0.5}, {"data_noise": 0.25},
+               {"data_iid": True}, {"n_test": 8}):
+        assert dataclasses.replace(SPEC, **kw).fingerprint() == \
+            SPEC.fingerprint(), kw
+    # ...structure does
+    for kw in ({"widths": (2, 2, 2)}, {"num_nodes": 6},
+               {"nodes_per_round": 3}, {"interval_length": 1},
+               {"aggregation": "average"}, {"engine": "dense"}):
+        assert dataclasses.replace(SPEC, **kw).fingerprint() != \
+            SPEC.fingerprint(), kw
+
+
+def test_group_mode_routing():
+    assert group_mode(SPEC) == "stacked"
+    assert group_mode(dataclasses.replace(SPEC, schedule="async")) \
+        == "sequential"
+    sess = FederationSession.create(SPEC, jax.random.PRNGKey(0),
+                                    rounds=3)  # explicit key plan
+    assert group_mode(SPEC, sess) == "sequential"
+    assert group_key(SPEC).endswith(":stacked")
+
+
+# -- admission ----------------------------------------------------------
+
+def test_slot_grid_sizes_to_first_admission():
+    g = SlotGrid(64)
+    for sid in ("a", "b", "c"):
+        g.submit(sid)
+    assert g.n_slots == 0               # width unknown until admission
+    assert [s for _, s in g.admit()] == ["a", "b", "c"]
+    assert g.n_slots == 3               # queue-sized, not cap-sized
+    g.submit("d")
+    assert g.admit() == []              # frozen width: d waits for a slot
+    g.free(1)
+    assert g.admit() == [(1, "d")]
+
+
+def test_slot_grid_fifo_lowest_index_first():
+    g = SlotGrid(2)
+    for sid in ("a", "b", "c"):
+        g.submit(sid)
+    assert g.admit() == [(0, "a"), (1, "b")]
+    assert g.admit() == []            # full: c waits
+    assert g.free(0) == "a"
+    assert g.admit() == [(0, "c")]    # freed slot claimed immediately
+    with pytest.raises(ValueError):
+        g.submit("b")                 # already seated
+    with pytest.raises(ValueError):
+        g.free(1) and g.free(1)
+
+
+# -- served == solo (the tentpole gate) ---------------------------------
+
+def test_served_matches_solo_mixed_specs(x64):
+    """Five tenants, two groups, per-tenant eta/eps, fewer slots than
+    tenants — every served tenant ends within 1e-10 of stepping alone."""
+    mix = [(SPEC, 3),
+           (dataclasses.replace(SPEC, widths=(2, 2, 2)), 2),
+           (dataclasses.replace(SPEC, eta=2.0, eps=0.05), 4),
+           (SPEC, 1),
+           (dataclasses.replace(SPEC, widths=(2, 2, 2), eta=0.7), 3)]
+    server = FederationServer(slots=3)
+    sids = [server.submit(spec, key=jax.random.PRNGKey(100 + i),
+                          rounds=r) for i, (spec, r) in enumerate(mix)]
+    server.drain()
+    assert len(server.groups) == 2
+    for sid, (spec, r) in zip(sids, mix):
+        solo = FederationSession.create(
+            spec, jax.random.PRNGKey(100 + sids.index(sid)))
+        for _ in range(r):
+            solo.step()
+        served = server.session(sid)
+        assert served.round == solo.round == r
+        assert _max_diff(_params_of(served), _params_of(solo)) <= 1e-10
+
+
+def test_multi_round_ticks_match_solo(x64):
+    """rounds_per_tick=4 with budgets that do NOT divide 4: slots must
+    stop advancing at their budget inside the scanned tick (coasting
+    masked), so every tenant still matches stepping alone."""
+    budgets = [3, 4, 1, 6]
+    server = FederationServer(slots=2, rounds_per_tick=4)
+    sids = [server.submit(SPEC, key=jax.random.PRNGKey(40 + i), rounds=r)
+            for i, r in enumerate(budgets)]
+    server.drain()
+    for i, (sid, r) in enumerate(zip(sids, budgets)):
+        solo = FederationSession.create(SPEC, jax.random.PRNGKey(40 + i))
+        for _ in range(r):
+            solo.step()
+        served = server.session(sid)
+        assert served.round == r
+        assert _max_diff(_params_of(served), _params_of(solo)) <= 1e-10
+
+
+def test_sequential_fallback_matches_solo(x64):
+    """An async-schedule quantum spec can't stack — the server drives it
+    through the sequential group and still matches solo stepping."""
+    spec = dataclasses.replace(SPEC, schedule="async", async_commit=2)
+    server = FederationServer(slots=2)
+    sid = server.submit(spec, key=jax.random.PRNGKey(4), rounds=3)
+    server.drain()
+    assert group_key(spec).endswith(":sequential")
+    solo = FederationSession.create(spec, jax.random.PRNGKey(4))
+    for _ in range(3):
+        solo.step()
+    assert _max_diff(_params_of(server.session(sid)),
+                     _params_of(solo)) == 0.0
+
+
+def test_deterministic_slot_reuse_replay(x64):
+    """Replaying the same submission sequence (4 tenants, 2 slots —
+    slots are reused) reproduces every final state bit-exactly."""
+    def serve_all():
+        server = FederationServer(slots=2)
+        sids = [server.submit(SPEC, key=jax.random.PRNGKey(i), rounds=2)
+                for i in range(4)]
+        server.drain()
+        return [np.asarray(p) for sid in sids
+                for p in _params_of(server.session(sid))]
+
+    a, b = serve_all(), serve_all()
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+# -- park / evict / revive ---------------------------------------------
+
+def test_park_revive_bit_exact_mid_run(x64, tmp_path):
+    """Serve 2 rounds, park to disk, revive, serve 2 more — identical
+    to 4 rounds uninterrupted."""
+    store = CheckpointStore(str(tmp_path))
+    server = FederationServer(slots=2, store=store)
+    key = jax.random.PRNGKey(11)
+    sid = server.submit(SPEC, key=key, rounds=2)
+    server.drain()
+    path = server.park(sid)
+    assert store.is_parked(sid) and os.path.exists(path)
+
+    revived = store.get(sid)          # revives from the checkpoint
+    assert not store.is_parked(sid)
+    for _ in range(2):
+        revived.step()
+
+    solo = FederationSession.create(SPEC, key)
+    for _ in range(4):
+        solo.step()
+    for a, b in zip(_params_of(revived), _params_of(solo)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lru_eviction_parks_coldest(tmp_path):
+    store = CheckpointStore(str(tmp_path), capacity=2)
+    sessions = {f"s{i}": FederationSession.create(
+        SPEC, jax.random.PRNGKey(i)) for i in range(3)}
+    for sid, s in sessions.items():
+        store.add(sid, s)
+    # s0 was coldest -> parked to disk; live set stays at capacity
+    assert store.is_parked("s0") and store.n_live == 2
+    assert os.path.exists(store.path("s0"))
+    ref = [np.asarray(p) for p in _params_of(sessions["s0"])]
+    revived = store.get("s0")         # LRU: parks s1 on revival
+    assert store.is_parked("s1")
+    for a, b in zip(_params_of(revived), ref):
+        np.testing.assert_array_equal(np.asarray(a), b)
+
+
+def test_pinned_sessions_never_park(tmp_path):
+    store = CheckpointStore(str(tmp_path), capacity=1)
+    store.add("a", FederationSession.create(SPEC, jax.random.PRNGKey(0)))
+    store.pin("a")
+    store.add("b", FederationSession.create(SPEC, jax.random.PRNGKey(1)))
+    # "a" is pinned (state lives on a grid): the cap falls on "b", the
+    # only evictable session, even though it is the newest
+    assert not store.is_parked("a")
+    assert store.is_parked("b")
+    with pytest.raises(ValueError):
+        store.park("a")
+    store.unpin("a")
+    store.get("b")       # reviving "b" re-applies the cap: now "a" parks
+    assert store.is_parked("a") and not store.is_parked("b")
+
+
+# -- crash-safe checkpointing ------------------------------------------
+
+def test_torn_checkpoint_detected(tmp_path):
+    p = str(tmp_path / "c.npz")
+    ckpt.save(p, {"x": np.arange(8.0)}, step=1)
+    raw = open(p, "rb").read()
+    torn = str(tmp_path / "torn.npz")
+    with open(torn, "wb") as f:
+        f.write(raw[: int(len(raw) * 0.6)])   # truncation injection
+    with pytest.raises(ValueError, match="torn"):
+        ckpt.restore(torn)
+    with pytest.raises(FileNotFoundError):    # missing stays distinct
+        ckpt.restore(str(tmp_path / "nope.npz"))
+
+
+def test_failed_save_keeps_old_checkpoint(tmp_path, monkeypatch):
+    p = str(tmp_path / "c.npz")
+    ckpt.save(p, {"x": np.arange(3.0)}, step=1)
+
+    def boom(f, **kw):
+        f.write(b"partial garbage")
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr("repro.checkpoint.checkpoint.np.savez", boom)
+    with pytest.raises(RuntimeError):
+        ckpt.save(p, {"x": np.zeros(3)}, step=2)
+    monkeypatch.undo()
+    flat, meta = ckpt.restore(p)      # old checkpoint intact...
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(np.asarray(flat["x"]), np.arange(3.0))
+    assert not glob.glob(str(tmp_path / "tmp*"))   # ...and no debris
+
+
+def test_session_save_is_crash_safe(x64, tmp_path):
+    """A session checkpoint interrupted mid-write leaves the previous
+    round's file restorable (the serving store's park path)."""
+    sess = FederationSession.create(SPEC, jax.random.PRNGKey(2))
+    sess.step()
+    p = str(tmp_path / "s.npz")
+    sess.save(p)
+    ref = [np.asarray(x) for x in _params_of(sess)]
+    sess.step()
+
+    import repro.checkpoint.checkpoint as C
+    real = C.np.savez
+    calls = []
+
+    def boom(f, **kw):
+        calls.append(1)
+        raise OSError("kill -9 mid-write")
+
+    C.np.savez = boom
+    try:
+        with pytest.raises(OSError):
+            sess.save(p)
+    finally:
+        C.np.savez = real
+    assert calls
+    revived = FederationSession.resume(p)
+    assert revived.round == 1
+    for a, b in zip(_params_of(revived), ref):
+        np.testing.assert_array_equal(np.asarray(a), b)

@@ -84,6 +84,52 @@ def test_uniform_schedule_bit_compatible_with_plain_choice():
     np.testing.assert_array_equal(np.asarray(mask), np.ones(4, np.float32))
 
 
+def test_sampled_method_distinct_in_range_deterministic():
+    """Floyd's O(N_p^2) sampler (forced via method="sampled"): valid
+    without-replacement draws, same key -> same subset. Jitted once —
+    the eager path would recompile per key value (the fori_loop closes
+    over the split keys)."""
+    draw = jax.jit(lambda key: participation.sample_nodes(
+        key, 50, 7, method="sampled"))
+    for seed in range(20):
+        key = jax.random.PRNGKey(seed)
+        sel, mask = draw(key)
+        arr = np.asarray(sel)
+        assert len(set(arr.tolist())) == 7          # no repeats
+        assert arr.min() >= 0 and arr.max() < 50    # in range
+        np.testing.assert_array_equal(arr, np.asarray(draw(key)[0]))
+        np.testing.assert_array_equal(np.asarray(mask),
+                                      np.ones(7, np.float32))
+
+
+def test_sampled_method_frequency_uniform():
+    """Every node should appear ~k/n of the time under Floyd sampling
+    (uniformity over subsets AND positions)."""
+    n, k, trials = 10, 3, 2000
+    draw = jax.jit(jax.vmap(lambda key: participation.sample_nodes(
+        key, n, k, method="sampled")[0]))
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(trials))
+    counts = np.bincount(np.asarray(draw(keys)).ravel(), minlength=n)
+    freq = counts / trials
+    np.testing.assert_allclose(freq, k / n, atol=0.05)
+
+
+def test_auto_method_routes_by_size():
+    """auto == dense below SAMPLED_MIN (bit-compatible with the frozen
+    parity runs), Floyd above it when N_p^2 < N."""
+    key = jax.random.PRNGKey(9)
+    small, _ = participation.sample_nodes(key, 64, 4)
+    dense, _ = participation.sample_nodes(key, 64, 4, method="dense")
+    np.testing.assert_array_equal(np.asarray(small), np.asarray(dense))
+
+    n = participation.SAMPLED_MIN
+    auto, _ = participation.sample_nodes(key, n, 8)
+    floyd, _ = participation.sample_nodes(key, n, 8, method="sampled")
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(floyd))
+    with pytest.raises(ValueError, match="unknown sampling method"):
+        participation.sample_nodes(key, 8, 2, method="fastest")
+
+
 def test_sampling_without_replacement_all_schedules():
     sizes = jnp.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
     for schedule in participation.SCHEDULES:
