@@ -1,0 +1,179 @@
+"""Cohort-scale federation harness — rounds/sec vs TOTAL cohort size at
+fixed ``nodes_per_round``, plus hierarchy-vs-flat aggregation timing.
+
+    PYTHONPATH=src python -m benchmarks.bench_cohort            # full
+    PYTHONPATH=src python -m benchmarks.bench_cohort --quick    # CI smoke
+
+The sweep drives a real ``FederationSession`` per cell with the total
+cohort growing 1k -> 1M nodes while every round still samples the same
+``nodes_per_round`` — with O(sampled) participation (Floyd's sampler
+past ``SAMPLED_MIN``, the ``participation_method="auto"`` default) the
+per-round cost must be flat in the TOTAL cohort size (gated within 2x;
+an O(total) draw would be ~1000x). Node data for the giant cohorts is a
+small Haar-pair base set tiled to N nodes — the round only ever gathers
+the sampled slice, so tiling changes nothing the benchmark touches, and
+it keeps the 1M cell's setup to ~100 MB instead of hours of Haar
+sampling.
+
+The hierarchy cell times one wide-cohort round (Eq. 6 product combine,
+chain-dominated) flat vs under the two-level pod tree
+(``topology="two_level"``): the tree cuts the sequential chain from N_p
+steps to N_p/pods + pods pod-batched ``bmm`` steps.
+
+Writes ``BENCH_cohort.json``; CI's cohort-bench job runs ``--quick``
+and checks the committed file's schema, its O(sampled) scaling floor,
+and the hierarchy cell.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+if __package__ in (None, ""):  # script mode: python benchmarks/bench_cohort.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.run import RoundTimer, quick_cap, warm_session
+from repro.core.fed import api
+from repro.core.fed.api.substrate import QuantumSubstrate
+from repro.core.quantum.data import QuantumDataset, make_federated_dataset
+
+# the sweep's fixed per-round sample; total cohort size is the variable
+NODES_PER_ROUND = 8
+SWEEP = (1_000, 10_000, 100_000, 1_000_000)
+BASE_NODES = 64   # distinct Haar nodes the giant cohorts tile
+
+
+def tile_dataset(ds: QuantumDataset, total: int) -> QuantumDataset:
+    """Tile a base dataset's node axis out to ``total`` nodes.
+
+    The tiled arrays are device_put ONCE here: a numpy operand would be
+    re-transferred host->device on every jitted round call — an O(total)
+    per-round cost that swamps exactly the O(sampled) behaviour the
+    sweep exists to measure.
+    """
+    reps = -(-total // ds.phi_in.shape[0])
+
+    def t(x):
+        if x is None:
+            return None
+        x = np.asarray(x)
+        return jax.device_put(
+            np.tile(x, (reps,) + (1,) * (x.ndim - 1))[:total])
+
+    return QuantumDataset(phi_in=t(ds.phi_in), phi_out=t(ds.phi_out),
+                          n_per=t(ds.n_per))
+
+
+def sweep_cell(total_nodes: int, rounds: int, base) -> dict:
+    """rounds/sec for one total-cohort size at fixed nodes_per_round."""
+    u, ds, test = base
+    spec = api.FedSpec.quantum(
+        (2, 2), num_nodes=total_nodes, nodes_per_round=NODES_PER_ROUND,
+        n_per_node=1, interval_length=1, aggregation="average", n_test=2)
+    sub = QuantumSubstrate(spec, dataset=tile_dataset(ds, total_nodes),
+                          test=test)
+    warm_session(spec, rounds=2, substrate=sub)
+    sess = api.FederationSession.create(
+        spec, jax.random.PRNGKey(spec.data_seed), substrate=sub)
+    timer = RoundTimer()
+    sess.run(rounds, callbacks=[timer])
+    total_s = sum(timer.round_s)
+    return {
+        "total_nodes": total_nodes,
+        "nodes_per_round": NODES_PER_ROUND,
+        "rounds": rounds,
+        "participation_method": spec.participation_method,
+        "round_ms": round(1e3 * total_s / rounds, 3),
+        "rounds_per_s": round(rounds / total_s, 2),
+    }
+
+
+def hierarchy_cell(rounds: int, quick: bool) -> dict:
+    """One chain-dominated round (Eq. 6 product), flat vs two-level."""
+    n_p = 16 if quick else 64
+    pods = 4 if quick else 8
+    spec = api.FedSpec.quantum(
+        (2, 3, 2), num_nodes=2 * n_p, nodes_per_round=n_p, n_per_node=1,
+        interval_length=1, aggregation="product", n_test=2)
+    _, ds, test = make_federated_dataset(
+        jax.random.PRNGKey(3), 2, num_nodes=2 * n_p, n_per_node=1,
+        n_test=2)
+
+    def time_one(s):
+        sub = QuantumSubstrate(s, dataset=ds, test=test)
+        warm_session(s, rounds=2, substrate=sub)
+        sess = api.FederationSession.create(
+            s, jax.random.PRNGKey(s.data_seed), substrate=sub)
+        timer = RoundTimer()
+        sess.run(rounds, callbacks=[timer])
+        return 1e3 * sum(timer.round_s) / rounds
+
+    flat_ms = time_one(spec)
+    tree_ms = time_one(dataclasses.replace(spec, topology="two_level",
+                                           pods=pods))
+    return {
+        "widths": [2, 3, 2],
+        "nodes_per_round": n_p,
+        "pods": pods,
+        "aggregation": "product",
+        "rounds": rounds,
+        "flat_ms": round(flat_ms, 3),
+        "two_level_ms": round(tree_ms, 3),
+        "speedup": round(flat_ms / tree_ms, 3),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="1k-node cell + small hierarchy cell (CI smoke)")
+    ap.add_argument("--rounds", type=int, default=20,
+                    help="timed rounds per sweep cell")
+    ap.add_argument("--out", default="BENCH_cohort.json")
+    args = ap.parse_args()
+
+    rounds = quick_cap(args.rounds, 3, args.quick)
+    counts = SWEEP[:1] if args.quick else SWEEP
+
+    base = make_federated_dataset(jax.random.PRNGKey(1), 2,
+                                  num_nodes=BASE_NODES, n_per_node=1,
+                                  n_test=2)
+    cells = []
+    for n in counts:
+        cell = sweep_cell(n, rounds, base)
+        cells.append(cell)
+        print(f"total {n:8d}  {cell['round_ms']:8.2f} ms/round  "
+              f"({cell['rounds_per_s']:.1f} rounds/s)")
+    rps = [c["rounds_per_s"] for c in cells]
+    ratio = round(max(rps) / min(rps), 3)
+    print(f"rounds/s spread across cohort sizes: {ratio}x "
+          f"(flat-scaling gate: <= 2x)")
+
+    hier = hierarchy_cell(rounds, args.quick)
+    print(f"hierarchy N_p={hier['nodes_per_round']} pods={hier['pods']}: "
+          f"flat {hier['flat_ms']:.1f} ms  two_level "
+          f"{hier['two_level_ms']:.1f} ms  ({hier['speedup']}x)")
+
+    payload = {
+        "bench": "fed_cohort",
+        "quick": bool(args.quick),
+        "backend": jax.default_backend(),
+        "nodes_per_round": NODES_PER_ROUND,
+        "sweep": cells,
+        "scaling_ratio": ratio,
+        "hierarchy": hier,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {args.out} ({len(cells)} sweep cells)")
+
+
+if __name__ == "__main__":
+    main()

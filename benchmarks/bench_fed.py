@@ -17,45 +17,25 @@ import dataclasses
 import glob
 import json
 import os
-import time
 
 import jax
 
+from benchmarks.run import RoundTimer, warm_session
 from repro.core.fed import api
-
-
-class _RoundTimer(api.Callback):
-    """Wall-clock per round, state forced to ready before the stamp."""
-
-    def __init__(self):
-        self.round_s = []
-        self._t = None
-
-    def on_run_begin(self, session):
-        jax.block_until_ready(jax.tree.leaves(session.state))
-        self._t = time.perf_counter()
-
-    def on_round_end(self, session, metrics):
-        jax.block_until_ready(jax.tree.leaves(session.state))
-        now = time.perf_counter()
-        self.round_s.append(now - self._t)
-        self._t = now
 
 
 def run_cell(spec: api.FedSpec, schedule: str, rounds: int) -> dict:
     """One (spec, schedule) sweep cell -> entry dict."""
     spec = dataclasses.replace(spec, schedule=schedule)
-    # untimed warmup on a throwaway session: the jit cache is process-
-    # wide, so the timed rounds below measure steady-state round latency
-    # rather than trace+compile (which would also skew the cross-
-    # schedule comparison — sync compiles one fused round, async four
-    # phase jits)
-    warm = api.FederationSession.create(
-        spec, jax.random.PRNGKey(spec.data_seed))
-    warm.run(min(2, rounds), callbacks=[api.EvalEvery(1)])
+    # untimed warmup on a throwaway session (shared helper): the jit
+    # cache is process-wide, so the timed rounds below measure
+    # steady-state round latency rather than trace+compile (which would
+    # also skew the cross-schedule comparison — sync compiles one fused
+    # round, async four phase jits)
+    warm_session(spec, rounds=min(2, rounds), eval_every=1)
     sess = api.FederationSession.create(
         spec, jax.random.PRNGKey(spec.data_seed))
-    timer = _RoundTimer()
+    timer = RoundTimer()
     sess.run(rounds, callbacks=[timer, api.EvalEvery(1)])
     return {
         "schedule": schedule,

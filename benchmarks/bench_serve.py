@@ -1,8 +1,8 @@
 """Multi-tenant serving throughput — ``FederationServer`` vs stepping
 tenants one by one.
 
-    PYTHONPATH=src python benchmarks/bench_serve.py            # full
-    PYTHONPATH=src python benchmarks/bench_serve.py --quick    # CI smoke
+    PYTHONPATH=src python -m benchmarks.bench_serve            # full
+    PYTHONPATH=src python -m benchmarks.bench_serve --quick    # CI smoke
 
 Each cell serves T tenants (a 90/10 mix of two spec shapes — two
 serving groups — with per-tenant learning rates, so the stacked path is
@@ -25,10 +25,17 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import os
+import sys
 import time
+
+if __package__ in (None, ""):   # script mode: python benchmarks/bench_serve.py
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
 
 import jax
 
+from benchmarks.run import block_ready, quick_cap
 from repro.core.fed.api.session import FederationSession
 from repro.core.fed.api.spec import FedSpec
 from repro.core.fed.api.substrate import make_substrate
@@ -82,8 +89,7 @@ def build_sessions(n_tenants: int):
             for i in range(n_tenants)]
 
 
-def _block(sessions):
-    jax.block_until_ready([jax.tree.leaves(s.state) for s in sessions])
+_block = block_ready   # shared helper (benchmarks.run)
 
 
 def warm_shapes(n_tenants: int, slots: int, k: int, warmed: set) -> None:
@@ -172,12 +178,12 @@ def main() -> None:
         tenant_counts = [64]
     else:
         tenant_counts = [100, 1000, 10000]
-    slots = min(args.slots, 32) if args.quick else args.slots
-    rounds = min(args.rounds, 2) if args.quick else args.rounds
+    slots = quick_cap(args.slots, 32, args.quick)
+    rounds = quick_cap(args.rounds, 2, args.quick)
 
     warmed: set = set()
     cells = []
-    k = min(2, args.rounds_per_tick) if args.quick else args.rounds_per_tick
+    k = quick_cap(args.rounds_per_tick, 2, args.quick)
     for n in tenant_counts:
         warm_shapes(n, slots, k, warmed)
         cell = run_cell(n, rounds, slots, k)

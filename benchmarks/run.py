@@ -17,20 +17,82 @@ import argparse
 import sys
 import time
 
-from benchmarks import (ablation_noniid, bench_channel_noise, bench_engine,
-                        bench_lemma1, bench_qnn_scaling, bench_throughput,
-                        fig2_interval, fig3_noise)
 
-SUITES = {
-    "fig2": fig2_interval.main,
-    "fig3": fig3_noise.main,
-    "lemma1": bench_lemma1.main,
-    "engine": bench_engine.main,
-    "qnn_scaling": bench_qnn_scaling.main,
-    "throughput": bench_throughput.main,
-    "ablation_noniid": ablation_noniid.main,
-    "channel_noise": bench_channel_noise.main,
-}
+def _suites():
+    """Suite registry, imported lazily so the shared timing helpers
+    below stay importable from the standalone bench scripts without
+    pulling every suite module (and its jit warmup) in."""
+    from benchmarks import (ablation_noniid, bench_channel_noise,
+                            bench_engine, bench_lemma1, bench_qnn_scaling,
+                            bench_throughput, fig2_interval, fig3_noise)
+    return {
+        "fig2": fig2_interval.main,
+        "fig3": fig3_noise.main,
+        "lemma1": bench_lemma1.main,
+        "engine": bench_engine.main,
+        "qnn_scaling": bench_qnn_scaling.main,
+        "throughput": bench_throughput.main,
+        "ablation_noniid": ablation_noniid.main,
+        "channel_noise": bench_channel_noise.main,
+    }
+
+
+# --- shared session-bench helpers (bench_fed / bench_serve / bench_cohort)
+# One home for the timing/warmup idioms every session-driven benchmark
+# needs, so the scripts can't drift apart on what a "round" costs: state
+# is always blocked to ready before a stamp (async dispatch must not
+# flatter a schedule) and compiles always land in an untimed warmup
+# pass (the jit cache is process-wide).
+
+def block_ready(sessions) -> None:
+    """Force one session's (or a list of sessions') state to ready."""
+    import jax
+    if not isinstance(sessions, (list, tuple)):
+        sessions = [sessions]
+    jax.block_until_ready([jax.tree.leaves(s.state) for s in sessions])
+
+
+class RoundTimer:
+    """Per-round wall-clock ``api.Callback`` (duck-typed), state forced
+    to ready before every stamp."""
+
+    def __init__(self):
+        self.round_s = []
+        self._t = None
+
+    def on_run_begin(self, session):
+        block_ready(session)
+        self._t = time.perf_counter()
+
+    def on_round_end(self, session, metrics):
+        block_ready(session)
+        now = time.perf_counter()
+        self.round_s.append(now - self._t)
+        self._t = now
+
+    def on_run_end(self, session):
+        pass
+
+
+def warm_session(spec, rounds: int = 1, substrate=None, eval_every=None):
+    """Untimed warmup: drive a throwaway session for ``rounds`` rounds so
+    every jit the timed cell will hit compiles here (including the eval
+    jit when ``eval_every`` is set). Returns the warm session (callers
+    may reuse its substrate for the timed one)."""
+    import jax
+
+    from repro.core.fed import api
+    warm = api.FederationSession.create(
+        spec, jax.random.PRNGKey(spec.data_seed), substrate=substrate)
+    cbs = [api.EvalEvery(eval_every)] if eval_every else []
+    warm.run(rounds, callbacks=cbs)
+    return warm
+
+
+def quick_cap(value: int, cap: int, quick: bool) -> int:
+    """The shared ``--quick`` semantics: CI smoke caps a knob at ``cap``;
+    a full run keeps it."""
+    return min(value, cap) if quick else value
 
 
 def main() -> None:
@@ -61,9 +123,12 @@ def main() -> None:
                     "(dense vs local_opb vs low-rank local) instead of "
                     "the suites")
     ap.add_argument("--quick", action="store_true",
-                    help="--engine-bench: tiny cell only (CI smoke)")
+                    help="CI-smoke semantics shared by every bench mode: "
+                    "tiny cells only (--engine-bench: the small width; "
+                    "--spec: rounds capped at 2)")
     args = ap.parse_args()
-    names = [n for n in args.only.split(",") if n] or list(SUITES)
+    suites = _suites()
+    names = [n for n in args.only.split(",") if n] or list(suites)
 
     if args.engine_bench:
         rows = []
@@ -80,7 +145,8 @@ def main() -> None:
         from benchmarks import bench_fed
         rows = []
         t0 = time.time()
-        bench_fed.main(rows, args.spec, rounds=args.rounds,
+        bench_fed.main(rows, args.spec,
+                       rounds=quick_cap(args.rounds, 2, args.quick),
                        schedules=[s for s in args.schedules.split(",")
                                   if s] or None,
                        out=args.out or "BENCH_fed.json")
@@ -105,12 +171,12 @@ def main() -> None:
     rows = []
     t0 = time.time()
     for name in names:
-        if name not in SUITES:
-            print(f"unknown suite {name!r}; have {sorted(SUITES)}",
+        if name not in suites:
+            print(f"unknown suite {name!r}; have {sorted(suites)}",
                   file=sys.stderr)
             sys.exit(2)
         print(f"\n==== {name} ====")
-        SUITES[name](rows)
+        suites[name](rows)
     print(f"\n==== CSV summary ({time.time()-t0:.0f}s total) ====")
     print("name,us_per_call,derived")
     for name, us, derived in rows:

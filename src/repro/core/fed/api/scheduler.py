@@ -12,11 +12,13 @@
   ``async_commit`` (K) uploads have arrived, decaying each upload's
   Alg. 2 weight by ``staleness_decay ** staleness`` (staleness = commits
   since the upload's dispatch) and renormalizing over the K committed.
-  Per-node latency streams are counter-based (``numpy`` ``SeedSequence``
-  on ``(latency_seed, node, dispatch)`` — a persistent lognormal
-  per-node speed times an exponential per-dispatch draw), so runs are
-  deterministic and resumable: the buffer (uploads, arrival times,
-  dispatch versions, weights) rides in the checkpoint.
+  Per-node latency streams come from the ``cohort.latency`` registry
+  (``FedSpec.latency_model``: ``"counter"`` — the original synthetic
+  streams, bit-compatible — or ``"lognormal"`` / ``"pareto"`` /
+  ``"trace"`` replay); every model is counter-based (pure in
+  ``(latency_seed, node, dispatch)``), so runs are deterministic and
+  resumable: the buffer (uploads, arrival times, dispatch versions,
+  weights) rides in the checkpoint and nothing latency-related needs to.
 * ``"overlapped"`` — software pipelining: round t+1's local fan-out is
   dispatched against the pre-aggregation state and round t's aggregation
   commits AFTER it is enqueued, so on the pod mesh the ``shard_map``
@@ -37,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fed.api import phases
+from repro.core.fed.cohort import latency as flatency
 
 
 class Scheduler:
@@ -93,19 +96,20 @@ class AsyncScheduler(Scheduler):
                          else max(1, spec.nodes_per_round // 2))
         self.decay = spec.staleness_decay
         self.seed = spec.latency_seed
+        # the per-node arrival-time stream, from the cohort registry
+        # (FedSpec.latency_model; "counter" reproduces the original
+        # hardwired streams bit-exactly)
+        self.latency = flatency.make_model(spec)
         self.clock = 0.0
         self.dispatched = 0
         # each entry: one node's in-flight upload + its arrival metadata
         self.entries: List[Dict[str, Any]] = []
 
-    # latency streams are COUNTER-BASED — pure in (seed, node, dispatch)
-    # — so nothing about them needs checkpointing
+    # latency streams are COUNTER-BASED — every registered model is pure
+    # in (seed, node, dispatch) — so nothing about them needs
+    # checkpointing and mid-buffer resume stays bit-exact under all
     def _latency(self, node: int, dispatch: int) -> float:
-        speed = np.random.default_rng(
-            [self.seed, node]).lognormal(mean=0.0, sigma=0.5)
-        draw = np.random.default_rng(
-            [self.seed, node, dispatch]).exponential()
-        return float(speed * draw)
+        return float(self.latency(node, dispatch))
 
     def _dispatch(self, session) -> Dict[str, Any]:
         """Send the next cohort to work against the CURRENT state."""

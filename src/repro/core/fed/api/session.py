@@ -4,7 +4,9 @@ One session = one federation run over a ``Substrate``: ``step()`` runs
 a single QuanFedPS round under the spec's SCHEDULER (``"sync"``
 lock-step, ``"async"`` staleness-weighted buffered commits,
 ``"overlapped"`` pipelined dispatch — see ``repro.core.fed.api.
-scheduler``), ``run(rounds, callbacks=...)`` drives many with a small
+scheduler``; the async timeline's client latencies come from the
+``FedSpec.latency_model`` registry in ``repro.core.fed.cohort.
+latency``), ``run(rounds, callbacks=...)`` drives many with a small
 hook system (metric streaming, eval-every, early stop, periodic
 checkpoints), ``save(path)`` writes spec + round + RNG state +
 substrate state + in-flight scheduler state (async buffers and all)
@@ -287,6 +289,15 @@ class FederationSession:
         """One federation round — one server COMMIT under the spec's
         scheduler; returns the round metrics."""
         return self.scheduler.step(self)
+
+    @property
+    def sim_clock(self) -> Optional[float]:
+        """The scheduler's simulated wall-clock — seconds of modeled
+        client latency (``FedSpec.latency_model``; see ``repro.core.
+        fed.cohort.latency``) advanced so far. None for schedulers
+        without a timeline ("sync")."""
+        clock = getattr(self.scheduler, "clock", None)
+        return None if clock is None else float(clock)
 
     def run(self, rounds: int, callbacks: Iterable[Callback] = ()
             ) -> Dict[str, list]:

@@ -43,6 +43,8 @@ _TUPLE_FIELDS = ("widths", "node_sizes")
 # noise ratio and iid-ness only change array VALUES).
 _NON_GROUPING_FIELDS = ("eta", "eps", "server_momentum", "data_seed",
                         "data_noise", "data_iid", "latency_seed",
+                        "latency_model", "latency_mu", "latency_sigma",
+                        "latency_alpha", "latency_trace",
                         "n_test", "eval_batch")
 
 
@@ -61,12 +63,23 @@ class FedSpec:
     interval_length: int = 1      # I_l
     aggregation: str = "average"      # strategy registry
     participation: str = "uniform"    # schedule registry
+    participation_method: str = "auto"    # "auto" | "dense" | "sampled"
     dropout_rate: float = 0.0
+    # --- aggregation-tree topology (cohort registry) -------------------
+    topology: str = "flat"            # "flat" | "two_level"
+    pods: Optional[int] = None        # two_level: pod count
+    pod_assignment: str = "block"     # "block" | "strided"
     # --- round scheduling (scheduler registry) -------------------------
     schedule: str = "sync"            # "sync" | "async" | "overlapped"
     async_commit: Optional[int] = None    # K: commit when K uploads land
     staleness_decay: float = 0.5      # async weight decay per commit
     latency_seed: int = 0             # async simulated-latency streams
+    # --- latency model (cohort.latency registry; async timeline) -------
+    latency_model: str = "counter"    # counter | lognormal | pareto | trace
+    latency_mu: float = 0.0           # lognormal location
+    latency_sigma: float = 0.5        # lognormal scale (> 0)
+    latency_alpha: float = 1.5        # pareto tail index (> 1)
+    latency_trace: Optional[str] = None   # trace: path to a trace file
     # --- server-side outer optimizer (server_opt registry) -------------
     server_opt: str = "none"          # "none" | "momentum" | "nesterov"
     server_momentum: float = 0.9
@@ -112,12 +125,20 @@ class FedSpec:
         # fail-loud registry validation at construction time
         from repro.core.fed import server_opt as fserver_opt
         from repro.core.fed.api import scheduler as fscheduler
+        from repro.core.fed.cohort import latency as flatency
+        from repro.core.fed.cohort import topology as ftopology
 
         agg = strategies.get_aggregation(self.aggregation)
         participation.validate(self.participation)
+        participation.validate_method(self.participation_method)
         fchannel.resolve_channel(self.upload_noise, self.quantize_bits)
         fscheduler.validate_schedule(self.schedule)
         fserver_opt.validate(self.server_opt)
+        ftopology.validate_topology(
+            self.topology, self.pods, self.pod_assignment,
+            nodes_per_round=self.nodes_per_round, combine=agg.combine,
+            schedule=self.schedule, async_commit=self.async_commit)
+        flatency.validate_spec(self)
         if self.server_opt != "none" and agg.combine != "average":
             raise ValueError(
                 f"server_opt {self.server_opt!r} smooths the aggregated "
@@ -184,6 +205,12 @@ class FedSpec:
                     "certified approximate engine — engine='local' only, "
                     f"got engine={self.engine!r}")
         else:
+            # the two-level tree regroups the quantum combiners; the
+            # classical delta stack has no pod tier (yet)
+            if self.topology != "flat":
+                raise ValueError(
+                    "topology='two_level' (hierarchical aggregation) is "
+                    "quantum-only; the classical substrate aggregates flat")
             # the classical substrate aggregates additive deltas — the
             # multiplicative Eq. 6 form does not exist for it
             if agg.combine != "average":
@@ -278,7 +305,10 @@ class FedSpec:
             participation=self.participation,
             dropout_rate=self.dropout_rate, fanout=self.fanout,
             quantize_bits=self.quantize_bits, rank_tol=self.rank_tol,
-            rank_cap=self.rank_cap, ensemble_dtype=self.ensemble_dtype)
+            rank_cap=self.rank_cap, ensemble_dtype=self.ensemble_dtype,
+            participation_method=self.participation_method,
+            topology=self.topology, pods=self.pods,
+            pod_assignment=self.pod_assignment)
 
     @classmethod
     def from_quantum_config(cls, cfg, **data_recipe) -> "FedSpec":
@@ -294,7 +324,9 @@ class FedSpec:
             dropout_rate=cfg.dropout_rate, fanout=cfg.fanout,
             quantize_bits=cfg.quantize_bits, rank_tol=cfg.rank_tol,
             rank_cap=cfg.rank_cap, ensemble_dtype=cfg.ensemble_dtype,
-            **data_recipe)
+            participation_method=cfg.participation_method,
+            topology=cfg.topology, pods=cfg.pods,
+            pod_assignment=cfg.pod_assignment, **data_recipe)
 
     def to_classical_config(self) -> FederatedConfig:
         """The legacy ``FederatedConfig`` this spec denotes."""

@@ -404,7 +404,8 @@ class ClassicalSubstrate:
         sel, pmask = participation.sample_nodes(
             key, spec.num_nodes, spec.nodes_per_round,
             schedule=spec.participation, node_sizes=node_tokens,
-            dropout_rate=spec.dropout_rate)
+            dropout_rate=spec.dropout_rate,
+            method=spec.participation_method)
         sel_batches = jax.tree.map(lambda x: x[sel], nodes)
 
         def to_steps(x):  # split each node's pool into I_l local steps

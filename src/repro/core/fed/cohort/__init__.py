@@ -1,0 +1,27 @@
+"""Cohort-scale federation: hierarchical aggregation trees + latency
+models for realistic 10k–1M-node simulated cohorts.
+
+Three pillars (see the submodule docstrings):
+
+* ``topology`` — the declarative two-level aggregation tree (nodes →
+  pods → root): ``FedSpec.topology/pods/pod_assignment`` resolve to a
+  ``Topology`` the quantum round aggregates under.
+* ``hierarchy`` — the tree aggregation itself: per-pod partials of the
+  strategy registry's combiners (Eq. 6 partial unitary chains, Eq. 8
+  partial generator sums) under ``shard_map`` on the 'pod' mesh axis
+  (vmap fallback on one device), plus the cross-pod combine that closes
+  the round.
+* ``latency`` — the ``LatencyModel`` registry driving the async
+  scheduler's simulated arrival times: ``counter`` (the PR 4 synthetic
+  streams, bit-compatible), ``lognormal`` / ``pareto`` parametric
+  distributions, and ``trace`` replay from a committed trace file.
+  All models are counter-based (pure in ``(seed, node, dispatch)``), so
+  mid-buffer kill-and-resume stays bit-exact with nothing extra in the
+  checkpoint.
+"""
+from repro.core.fed.cohort.topology import (  # noqa: F401
+    ASSIGNMENTS, TOPOLOGIES, Topology, pod_perm, resolve_topology,
+    validate_topology)
+from repro.core.fed.cohort.latency import (  # noqa: F401
+    LATENCY_MODELS, LatencyModel, load_trace, make_model, validate_spec)
+from repro.core.fed.cohort import hierarchy  # noqa: F401

@@ -52,7 +52,8 @@ SCHEDULES = ("uniform", "weighted", "dropout", "full")
 # that the dense permutation is cheaper anyway)
 SAMPLED_MIN = 4096
 
-_METHODS = ("auto", "dense", "sampled")
+METHODS = ("auto", "dense", "sampled")
+_METHODS = METHODS  # pre-PR-9 private alias
 
 
 def validate(schedule: str) -> str:
@@ -60,6 +61,15 @@ def validate(schedule: str) -> str:
         raise ValueError(f"unknown participation schedule {schedule!r}; "
                          f"registered: {list(SCHEDULES)}")
     return schedule
+
+
+def validate_method(method: str) -> str:
+    """Fail-loud check of a uniform-draw cost method name ("auto" |
+    "dense" | "sampled") — the ``FedSpec.participation_method`` knob."""
+    if method not in METHODS:
+        raise ValueError(f"unknown participation method {method!r}; "
+                         f"registered: {list(METHODS)}")
+    return method
 
 
 def _floyd_choice(key: jax.Array, num_nodes: int, k: int) -> jax.Array:

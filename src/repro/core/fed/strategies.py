@@ -71,6 +71,26 @@ def get_aggregation(name: str) -> Aggregation:
             f"{sorted(AGGREGATIONS)}") from None
 
 
+PARTIAL_KINDS: Dict[str, str] = {
+    "product": "unitary_chain",   # pods pre-multiply their Eq. 6 slice
+    "average": "generator_sum",   # pods pre-sum their Eq. 8 slice
+}
+
+
+def partial_kind(agg: Aggregation) -> str:
+    """The pod-level partial a two-level aggregation tree computes for
+    this combine (``repro.core.fed.cohort.hierarchy`` regroups a combine
+    by pod). A combine absent from ``PARTIAL_KINDS`` has no registered
+    tree form and fails loudly instead of silently aggregating flat."""
+    try:
+        return PARTIAL_KINDS[agg.combine]
+    except KeyError:
+        raise ValueError(
+            f"aggregation {agg.name!r} (combine={agg.combine!r}) has no "
+            f"registered two-level partial; known combines: "
+            f"{sorted(PARTIAL_KINDS)}") from None
+
+
 def wire_cast(tree, agg: Aggregation):
     """Apply the strategy's wire dtype to a pytree of uploads.
 

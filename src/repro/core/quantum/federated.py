@@ -69,6 +69,8 @@ from jax.sharding import PartitionSpec as P
 from repro.core.fed import channel as fchannel
 from repro.core.fed import participation, server_opt as fserver_opt
 from repro.core.fed import strategies
+from repro.core.fed.cohort import hierarchy as fhierarchy
+from repro.core.fed.cohort import topology as ftopology
 from repro.core.quantum import linalg as ql
 from repro.core.quantum import qnn
 from repro.core.quantum.data import QuantumDataset
@@ -90,8 +92,13 @@ class QuantumFedConfig(NamedTuple):
     engine: str = "local"             # "local" contractions | "dense" seed
     impl: str = "xla"                 # "xla" | "pallas" inner products
     participation: str = "uniform"    # schedule registry (fed.participation)
+    participation_method: str = "auto"    # uniform-draw cost policy
     dropout_rate: float = 0.0         # straggler rate for "dropout"
     fanout: str = "auto"              # "auto" | "vmap" | "shard_map"
+    # two-level aggregation tree (cohort registry): nodes -> pods -> root
+    topology: str = "flat"            # "flat" | "two_level"
+    pods: Optional[int] = None        # two_level: pod count
+    pod_assignment: str = "block"     # "block" | "strided"
     quantize_bits: Optional[int] = None  # channel registry: "quantize"
     # certified approximate rank (engine="local" only): SVD-truncated
     # ensembles with a tracked error bound — see qnn.update_matrices.
@@ -105,6 +112,18 @@ def _approx_on(cfg: QuantumFedConfig) -> bool:
     (also validates the knobs — fails loudly before tracing)."""
     return ql.resolve_approx(cfg.rank_tol, cfg.rank_cap,
                              cfg.ensemble_dtype) is not None
+
+
+def _topology_of(cfg: QuantumFedConfig):
+    """The static aggregation-tree ``Topology`` a cfg names — None for
+    flat. Validates fail-loud (pods dividing the cohort, block order for
+    the product combine) before any tracing."""
+    agg = strategies.get_aggregation(cfg.aggregation)
+    ftopology.validate_topology(
+        cfg.topology, cfg.pods, cfg.pod_assignment,
+        nodes_per_round=cfg.nodes_per_round, combine=agg.combine)
+    return ftopology.resolve_topology(cfg.topology, cfg.pods,
+                                      cfg.pod_assignment)
 
 
 def node_update(params: qnn.Params, phi_in: jax.Array, phi_out: jax.Array,
@@ -183,7 +202,7 @@ def _chain(us: jax.Array, upd: jax.Array, impl: str) -> jax.Array:
 
 def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
                       weights: jax.Array, eps, *, impl: str = "xla",
-                      factors=None) -> qnn.Params:
+                      factors=None, topo=None, mesh=None) -> qnn.Params:
     """Eq. 6: U^{l,j} = prod_{k=I_l}^{1} prod_{n} e^{i eps w_n K_{n,k}},
     then U_{t+1} = U^{l,j} U_t^{l,j}.
 
@@ -192,6 +211,10 @@ def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
     aggregate phases is an exact identity they are still valid and
     e^{i eps (w K)} = V e^{i eps w lam} V† skips the second eigh of
     every K in the round.
+
+    topo: optional ``cohort.Topology`` — the two-level tree applies the
+    SAME chain reassociated by pod (``hierarchy.tree_chain``), sharded
+    over the mesh's 'pod' axis when ``mesh`` carries one.
     """
     new_params = []
     for li, (us, ks) in enumerate(zip(params, ks_all)):
@@ -204,6 +227,10 @@ def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
             lam, v = factors[li]  # (N_p, I_l, m_l, d), (N_p, I_l, m_l, d, d)
             wl = weights[:, None, None, None].astype(lam.dtype)
             upd = ql.expm_eigh(lam * wl, v, eps)
+        if topo is not None:
+            new_params.append(fhierarchy.tree_chain(us, upd, topo,
+                                                    impl=impl, mesh=mesh))
+            continue
         # Eq. 6 application order: interval step k outermost (k=1 applied
         # first), node n innermost — flatten to one scan sequence.
         seq = jnp.swapaxes(upd, 0, 1).reshape((-1,) + upd.shape[2:])
@@ -212,15 +239,29 @@ def aggregate_product(params: qnn.Params, ks_all: List[jax.Array],
 
 
 def aggregate_average(params: qnn.Params, ks_all: List[jax.Array],
-                      weights: jax.Array, eps, *, impl: str = "xla"
-                      ) -> qnn.Params:
-    """Eq. 8: K_k = sum_n w_n K_{n,k};  U = prod_{k=I_l}^{1} e^{i eps K_k}."""
+                      weights: jax.Array, eps, *, impl: str = "xla",
+                      topo=None, mesh=None) -> qnn.Params:
+    """Eq. 8: K_k = sum_n w_n K_{n,k};  U = prod_{k=I_l}^{1} e^{i eps K_k}.
+
+    topo: optional ``cohort.Topology`` — pods pre-sum their members'
+    weighted generators and the cross-pod merge closes the sum (an exact
+    reassociation; see ``hierarchy.tree_mean_generators``)."""
     new_params = []
     for us, ks in zip(params, ks_all):
-        k_bar = jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
+        k_bar = _mean_generators(ks, weights, topo, mesh)
         upd = ql.expm_herm(k_bar, eps)  # (I_l, m_l, d, d)
         new_params.append(_chain(us, upd, impl))
     return new_params
+
+
+def _mean_generators(ks: jax.Array, weights: jax.Array, topo, mesh
+                     ) -> jax.Array:
+    """One layer's Eq. 8 weighted generator mean — flat einsum
+    (bit-compatible with the pre-tree aggregation) or the two-level
+    pod-partial reassociation."""
+    if topo is None:
+        return jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
+    return fhierarchy.tree_mean_generators(ks, weights, topo, mesh=mesh)
 
 
 def _node_batch(params: qnn.Params, node_in: jax.Array, node_out: jax.Array,
@@ -289,7 +330,7 @@ def _select_impl(dataset: QuantumDataset, key: jax.Array,
     sel, pmask = participation.sample_nodes(
         key, cfg.num_nodes, cfg.nodes_per_round,
         schedule=cfg.participation, node_sizes=counts,
-        dropout_rate=cfg.dropout_rate)
+        dropout_rate=cfg.dropout_rate, method=cfg.participation_method)
     # Alg. 2 data-volume weights N_n/N_t from the TRUE per-node counts,
     # renormalized over the nodes the schedule kept (dropout zeroes a
     # straggler's weight; size-proportional sampling pairs with uniform
@@ -335,22 +376,30 @@ def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
 
 def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
                     weights: jax.Array, eps, server_beta,
-                    cfg: QuantumFedConfig, server_opt: str, factors=None):
+                    cfg: QuantumFedConfig, server_opt: str, factors=None,
+                    mesh=None):
     """Strategy combine; with ``server_opt`` != "none" the averaged
     Hermitian generators K̄_k pass through server momentum first (state
     ``smom``: per-layer arrays, or None for the zero round-0 state).
+    ``cfg.topology`` routes the combine through the two-level pod tree
+    (sharded over the mesh's 'pod' axis when one is active).
     Returns ``(new_params, new_smom)``."""
     agg = strategies.get_aggregation(cfg.aggregation)
+    topo = _topology_of(cfg)
+    if topo is not None:
+        strategies.partial_kind(agg)   # fail loudly for tree-less combines
     if agg.combine == "product":
         # no additive delta to smooth (FedSpec rejects server_opt here)
         return (aggregate_product(params, ks_all, weights, eps,
-                                  impl=cfg.impl, factors=factors), None)
+                                  impl=cfg.impl, factors=factors,
+                                  topo=topo, mesh=mesh), None)
     if server_opt == "none":
         return (aggregate_average(params, ks_all, weights, eps,
-                                  impl=cfg.impl), None)
+                                  impl=cfg.impl, topo=topo, mesh=mesh),
+                None)
     new_params, new_smom = [], []
     for i, (us, ks) in enumerate(zip(params, ks_all)):
-        k_bar = jnp.einsum("n,nk...->k...", weights.astype(ks.dtype), ks)
+        k_bar = _mean_generators(ks, weights, topo, mesh)
         m2, eff = fserver_opt.generator_step(
             server_opt, server_beta, None if smom is None else smom[i],
             k_bar)
@@ -385,7 +434,7 @@ def _server_round_impl(params: qnn.Params, smom, dataset: QuantumDataset,
     ks_all = _transmit_impl(ks_all, k_noise, cfg)
     new_params, new_smom = _aggregate_impl(
         params, smom, ks_all, weights, eps, server_beta, cfg, server_opt,
-        factors=factors)
+        factors=factors, mesh=mesh)
     rdt = ql.real_dtype(ql.default_dtype())
     err_bound = (jnp.sum(weights.astype(rdt) * bounds.astype(rdt))
                  if certify else jnp.zeros((), rdt))
@@ -562,11 +611,11 @@ def transmit_phase(ks_all: List[jax.Array], key: jax.Array,
     return _transmit_jit(ks_all, key, static_cfg)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "server_opt"))
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh", "server_opt"))
 def _aggregate_jit(params, smom, ks_all, weights, eps, server_beta, cfg,
-                   server_opt):
+                   mesh, server_opt):
     return _aggregate_impl(params, smom, ks_all, weights, eps,
-                           server_beta, cfg, server_opt)
+                           server_beta, cfg, server_opt, mesh=mesh)
 
 
 def aggregate_phase(params: qnn.Params, ks_all: List[jax.Array],
@@ -575,11 +624,13 @@ def aggregate_phase(params: qnn.Params, ks_all: List[jax.Array],
                     server_beta: float = 0.9):
     """Phase 4: strategy combine into the global model; returns
     ``(new_params, new_smom)``. ``ks_all`` may stack ANY number of
-    uploads (async commits K of a cohort's N_p)."""
+    uploads (async commits K of a cohort's N_p) — under a two-level
+    topology the stack height must still split into ``cfg.pods`` equal
+    pods (spec validation gates the async commit size)."""
     fserver_opt.validate(server_opt)
-    static_cfg, _ = _round_statics(cfg)
+    static_cfg, mesh = _round_statics(cfg)
     return _aggregate_jit(params, smom, ks_all, weights, cfg.eps,
-                          server_beta, static_cfg, server_opt)
+                          server_beta, static_cfg, mesh, server_opt)
 
 
 def _round_statics(cfg: QuantumFedConfig):

@@ -90,6 +90,7 @@ def build_spec(args) -> api.FedSpec:
         nodes_per_round=args.nodes_per_round,
         interval_length=args.interval, lr=args.lr, outer_lr=args.outer_lr,
         participation=args.participation, dropout_rate=args.dropout,
+        participation_method=args.participation_method,
         node_batch=args.node_batch, seq_len=args.seq, node_sizes=sizes,
         data_iid=args.iid, data_seed=args.seed,
         schedule=args.schedule, async_commit=args.async_commit,
@@ -120,6 +121,11 @@ def main(argv=None):
                     help="node-selection schedule (shared registry)")
     ap.add_argument("--dropout", type=float, default=0.0,
                     help="straggler rate for --participation dropout")
+    ap.add_argument("--participation-method", default="auto",
+                    choices=participation.METHODS,
+                    help="uniform-draw cost policy: dense full "
+                    "permutation, Floyd's O(sampled) subset sampler, or "
+                    "auto thresholding on cohort size")
     ap.add_argument("--schedule", default="sync",
                     choices=sorted(api.SCHEDULERS),
                     help="round scheduler (sync lock-step, async "

@@ -1,0 +1,409 @@
+"""Cohort subsystem gates (``repro.core.fed.cohort``).
+
+* Hierarchical aggregation: ``topology="two_level"`` matches the flat
+  round to <= 1e-10 under x64 for BOTH registry combiners (Eq. 6
+  product / Eq. 8 average) — on the vmap fan-out in-process and on a
+  faked 4-device ('pod','data') shard_map mesh in a subprocess.
+* ``pod_assignment="strided"`` is exact for the commutative average and
+  fail-loud for the order-sensitive product chain.
+* Latency registry: ``"counter"`` reproduces the PR 4 inline streams
+  bit-exactly (so async scheduler timelines are unchanged),
+  lognormal/pareto are deterministic + positive, ``"trace"`` replays
+  the committed example file with round-robin node assignment.
+* Async mid-buffer kill-and-resume stays bit-exact under the
+  ``"lognormal"`` and ``"trace"`` models — every model is a pure
+  function of (latency_seed, node, dispatch), so checkpoints carry no
+  latency state.
+* FedSpec plumbing: topology knobs are structural (fingerprint-
+  relevant) and fail-loud incl. via ``from_json``; latency knobs are
+  behavioral (fingerprint-exempt); classical substrate rejects
+  two_level.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fed import api, participation
+from repro.core.fed.cohort import latency as flatency
+from repro.core.fed.cohort import topology as ftopology
+from repro.core.quantum import data as qdata
+from repro.core.quantum import federated as fed
+from repro.core.quantum import qnn
+
+WIDTHS = (2, 3, 2)
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRACE = os.path.join(ROOT, "benchmarks", "traces", "tiny_lognormal.json")
+
+
+def _max_err(xs, ys):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(xs, ys))
+
+
+def _round_setup(aggregation):
+    _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(0), 2,
+                                            num_nodes=8, n_per_node=3,
+                                            n_test=4)
+    params = qnn.init_params(jax.random.PRNGKey(1), WIDTHS)
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8,
+                               nodes_per_round=4, interval_length=2,
+                               eps=0.05, aggregation=aggregation)
+    return params, ds, cfg
+
+
+# ------------------------------------------------- hierarchical parity
+
+@pytest.mark.parametrize("aggregation", ["product", "average"])
+def test_two_level_matches_flat_vmap(x64, aggregation):
+    """The two-level tree is an exact reassociation of the flat combine
+    for both registry combiners (vmap fan-out, single device)."""
+    params, ds, cfg = _round_setup(aggregation)
+    key = jax.random.PRNGKey(2)
+    flat = fed.server_round(params, ds, key, cfg)
+    tree = fed.server_round(params, ds, key,
+                            cfg._replace(topology="two_level", pods=2))
+    assert _max_err(flat, tree) <= 1e-10
+
+
+def test_two_level_strided_average_matches_flat(x64):
+    """Strided pod assignment reorders the slots — exact for the
+    commutative average combine."""
+    params, ds, cfg = _round_setup("average")
+    key = jax.random.PRNGKey(4)
+    flat = fed.server_round(params, ds, key, cfg)
+    tree = fed.server_round(
+        params, ds, key, cfg._replace(topology="two_level", pods=2,
+                                      pod_assignment="strided"))
+    assert _max_err(flat, tree) <= 1e-10
+
+
+def test_strided_product_fails_loudly():
+    params, ds, cfg = _round_setup("product")
+    bad = cfg._replace(topology="two_level", pods=2,
+                       pod_assignment="strided")
+    with pytest.raises(ValueError, match="product chain"):
+        fed.server_round(params, ds, jax.random.PRNGKey(0), bad)
+
+
+_MULTI_DEVICE_CHILD = """
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+from repro.core.quantum import data as qdata, federated as fed, qnn
+
+WIDTHS = (2, 3, 2)
+_, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(0), 2,
+                                        num_nodes=8, n_per_node=3, n_test=4)
+params = qnn.init_params(jax.random.PRNGKey(1), WIDTHS)
+key = jax.random.PRNGKey(2)
+for aggregation in ("product", "average"):
+    cfg = fed.QuantumFedConfig(widths=WIDTHS, num_nodes=8,
+                               nodes_per_round=4, interval_length=2,
+                               eps=0.05, aggregation=aggregation,
+                               topology="two_level", pods=2)
+    flat = fed.server_round(params, ds, key,
+                            cfg._replace(topology="flat", pods=None))
+    out_v = fed.server_round(params, ds, key, cfg)     # no mesh -> vmap tier
+    mesh = jax.make_mesh((2, 2), ("pod", "data"))
+    with mesh:
+        # pods=2 == pod-axis size: the pod tier runs under shard_map
+        out_s = fed.server_round(params, ds, key, cfg)
+    err = max(max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(flat, o))
+              for o in (out_v, out_s))
+    assert err <= 1e-10, (aggregation, err)
+print("PARITY_OK")
+"""
+
+
+def test_two_level_shard_map_multi_device_parity():
+    """The pod tier on a faked 4-device ('pod','data') mesh (device
+    count must be set before jax import, hence a subprocess) matches
+    the flat round to <= 1e-10 for both combiners."""
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                         if env.get("PYTHONPATH") else src)
+    proc = subprocess.run([sys.executable, "-c", _MULTI_DEVICE_CHILD],
+                          capture_output=True, text=True, env=env,
+                          cwd=ROOT, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "PARITY_OK" in proc.stdout
+
+
+# ------------------------------------------------------ topology knobs
+
+def test_topology_validation_fail_loud():
+    v = ftopology.validate_topology
+    with pytest.raises(ValueError, match="unknown topology"):
+        v("three_level", 2, "block", nodes_per_round=8)
+    with pytest.raises(ValueError, match="unknown pod_assignment"):
+        v("two_level", 2, "snake", nodes_per_round=8)
+    with pytest.raises(ValueError, match="leave it None"):
+        v("flat", 2, "block", nodes_per_round=8)
+    with pytest.raises(ValueError, match="requires pods"):
+        v("two_level", None, "block", nodes_per_round=8)
+    with pytest.raises(ValueError, match="out of range"):
+        v("two_level", 16, "block", nodes_per_round=8)
+    with pytest.raises(ValueError, match="equal-size pods"):
+        v("two_level", 3, "block", nodes_per_round=8)
+    # async commits aggregate async_commit uploads per server step
+    with pytest.raises(ValueError, match="async_commit"):
+        v("two_level", 4, "block", nodes_per_round=8, schedule="async",
+          async_commit=6)
+    v("two_level", 4, "block", nodes_per_round=8, schedule="async",
+      async_commit=4)  # divisible: fine
+    assert ftopology.resolve_topology("flat", None) is None
+    assert ftopology.resolve_topology("two_level", 4).pod_size(8) == 2
+
+
+def test_pod_perm_block_and_strided():
+    np.testing.assert_array_equal(ftopology.pod_perm(6, 3, "block"),
+                                  np.arange(6))
+    np.testing.assert_array_equal(ftopology.pod_perm(6, 3, "strided"),
+                                  [0, 3, 1, 4, 2, 5])
+
+
+# -------------------------------------------------------- latency models
+
+def test_counter_latency_bit_exact_with_inline_streams():
+    """The registry "counter" model IS the PR 4 inline formula — same
+    SeedSequence streams, bit for bit — so a default spec's async
+    scheduler timeline is unchanged by the registry."""
+    model = flatency.CounterLatency(seed=7)
+    for node, d in [(0, 0), (3, 2), (1, 5), (11, 0)]:
+        speed = np.random.default_rng([7, node]).lognormal(mean=0.0,
+                                                           sigma=0.5)
+        draw = np.random.default_rng([7, node, d]).exponential()
+        assert model(node, d) == float(speed * draw)
+
+
+def test_async_scheduler_uses_registry_counter_model():
+    spec = api.FedSpec.quantum((2, 2), num_nodes=4, nodes_per_round=2,
+                               interval_length=1, n_per_node=2, n_test=2,
+                               schedule="async", latency_seed=11)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(0))
+    sched = sess.scheduler
+    assert isinstance(sched.latency, flatency.CounterLatency)
+    ref = flatency.CounterLatency(seed=11)
+    assert sched._latency(2, 3) == ref(2, 3)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("lognormal", {}),
+    ("pareto", {}),
+])
+def test_parametric_models_deterministic_and_positive(name, kw):
+    spec = api.FedSpec.quantum((2, 2), num_nodes=4, nodes_per_round=2,
+                               n_per_node=2, n_test=2, schedule="async",
+                               latency_model=name, latency_seed=3, **kw)
+    a, b = flatency.make_model(spec), flatency.make_model(spec)
+    for node, d in [(0, 0), (5, 1), (2, 9)]:
+        assert a(node, d) == b(node, d)
+        assert a(node, d) > 0.0
+
+
+def test_trace_replay_round_robin():
+    rows = flatency.load_trace(TRACE)
+    spec = api.FedSpec.quantum((2, 2), num_nodes=32, nodes_per_round=2,
+                               n_per_node=2, n_test=2, schedule="async",
+                               latency_model="trace", latency_trace=TRACE)
+    model = flatency.make_model(spec)
+    n_clients = len(rows)
+    # node n plays row n % clients; dispatch d cycles the row
+    assert model(0, 0) == rows[0][0]
+    assert model(n_clients + 2, 0) == rows[2][0]
+    row = rows[1]
+    assert model(1, len(row) + 3) == row[3 % len(row)]
+
+
+def test_trace_file_validation(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"clients": []}))
+    with pytest.raises(ValueError):
+        flatency.load_trace(str(bad))
+    bad.write_text(json.dumps({"clients": [[1.0, -2.0]]}))
+    with pytest.raises(ValueError):
+        flatency.load_trace(str(bad))
+    with pytest.raises((ValueError, OSError)):
+        flatency.load_trace(str(tmp_path / "missing.json"))
+
+
+def test_latency_spec_validation_fail_loud():
+    def q(**kw):
+        return api.FedSpec.quantum((2, 2), num_nodes=4, nodes_per_round=2,
+                                   n_per_node=2, n_test=2, **kw)
+    with pytest.raises(ValueError, match="latency_model"):
+        q(latency_model="gaussian")
+    with pytest.raises(ValueError, match="latency_trace"):
+        q(latency_model="trace")  # trace model needs a file
+    with pytest.raises(ValueError, match="latency_trace"):
+        q(latency_model="counter", latency_trace=TRACE)  # file needs trace
+    with pytest.raises(ValueError, match="latency_sigma"):
+        q(latency_model="lognormal", latency_sigma=0.0)
+    with pytest.raises(ValueError, match="latency_alpha"):
+        q(latency_model="pareto", latency_alpha=1.0)
+    with pytest.raises(ValueError, match="participation method"):
+        q(participation_method="fastest")
+
+
+# ------------------------------------------- async resume under models
+
+def assert_states_equal(a, b):
+    jax.tree.map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+@pytest.mark.parametrize("latency_kw", [
+    dict(latency_model="lognormal", latency_sigma=0.7),
+    dict(latency_model="trace", latency_trace=TRACE),
+], ids=["lognormal", "trace"])
+def test_async_mid_buffer_resume_bit_exact_under_models(tmp_path,
+                                                        latency_kw):
+    """Kill-and-resume with in-flight buffered uploads stays bit-exact
+    under the parametric and trace models: latency is a pure function
+    of (latency_seed, node, dispatch), so the checkpoint carries no
+    latency state to drift."""
+    spec = api.FedSpec.quantum((2, 2), num_nodes=4, nodes_per_round=2,
+                               interval_length=2, eps=0.1, n_per_node=3,
+                               n_test=4, data_seed=5, schedule="async",
+                               async_commit=1, staleness_decay=0.5,
+                               latency_seed=9, **latency_kw)
+    straight = api.FederationSession.create(spec, jax.random.PRNGKey(3))
+    straight.run(3, callbacks=[api.EvalEvery(1)])
+
+    killed = api.FederationSession.create(spec, jax.random.PRNGKey(3))
+    killed.run(1, callbacks=[api.EvalEvery(1)])
+    # K=1 < N_p=2 guarantees in-flight uploads at the kill point
+    assert killed.scheduler.entries, "buffer must be non-empty"
+    path = str(tmp_path / "async.npz")
+    killed.save(path)
+    del killed
+
+    resumed = api.FederationSession.resume(path)
+    assert resumed.scheduler.entries  # buffer travelled
+    resumed.run(2, callbacks=[api.EvalEvery(1)])
+    assert resumed.history == straight.history
+    assert_states_equal(resumed.state, straight.state)
+    assert resumed.scheduler.clock == straight.scheduler.clock
+    assert resumed.scheduler.dispatched == straight.scheduler.dispatched
+
+
+def test_sim_clock_advances_under_trace_model():
+    """``session.sim_clock`` surfaces the simulated timeline the latency
+    model drives — advancing under "async", None under "sync"."""
+    base = dict(num_nodes=4, nodes_per_round=2, interval_length=1,
+                n_per_node=2, n_test=2)
+    spec = api.FedSpec.quantum((2, 2), **base, schedule="async",
+                               latency_model="trace", latency_trace=TRACE)
+    sess = api.FederationSession.create(spec, jax.random.PRNGKey(0))
+    assert sess.sim_clock == 0.0
+    sess.run(2)
+    assert sess.sim_clock > 0.0
+    sync = api.FederationSession.create(
+        api.FedSpec.quantum((2, 2), **base), jax.random.PRNGKey(0))
+    assert sync.sim_clock is None
+
+
+def test_async_timeline_differs_across_models():
+    """The models are actually different streams (a registry returning
+    counter everywhere would pass every other gate)."""
+    base = dict(num_nodes=4, nodes_per_round=2, n_per_node=2, n_test=2,
+                schedule="async", latency_seed=9)
+    mk = lambda **kw: flatency.make_model(
+        api.FedSpec.quantum((2, 2), **base, **kw))
+    counter = mk()
+    logn = mk(latency_model="lognormal", latency_sigma=0.7)
+    trace = mk(latency_model="trace", latency_trace=TRACE)
+    draws = {m(0, 0) for m in (counter, logn, trace)}
+    assert len(draws) == 3
+
+
+# ----------------------------------------------------- FedSpec plumbing
+
+def _tree_spec(**kw):
+    base = dict(num_nodes=8, nodes_per_round=4, interval_length=1,
+                n_per_node=2, n_test=2, topology="two_level", pods=2)
+    base.update(kw)
+    return api.FedSpec.quantum(WIDTHS, **base)
+
+
+def test_spec_topology_json_round_trip_and_fingerprint():
+    spec = _tree_spec(latency_model="lognormal", latency_sigma=0.9)
+    again = api.FedSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.fingerprint() == spec.fingerprint()
+
+    flat = dataclasses.replace(spec, topology="flat", pods=None)
+    # topology is STRUCTURAL: it changes the compiled round
+    assert flat.fingerprint() != spec.fingerprint()
+    assert (dataclasses.replace(spec, pod_assignment="strided",
+                                aggregation="average").fingerprint()
+            != dataclasses.replace(spec, aggregation="average")
+            .fingerprint())
+    # participation method changes the compiled draw: structural too
+    assert (dataclasses.replace(flat, participation_method="sampled")
+            .fingerprint() != flat.fingerprint())
+    # latency knobs are BEHAVIORAL (like latency_seed): same group
+    assert (dataclasses.replace(flat, latency_model="pareto",
+                                latency_alpha=2.0).fingerprint()
+            == flat.fingerprint())
+    assert (dataclasses.replace(flat, latency_model="trace",
+                                latency_trace=TRACE).fingerprint()
+            == flat.fingerprint())
+
+
+def test_spec_topology_validation_via_from_json():
+    spec = _tree_spec()
+    blob = spec.to_json_dict()
+    blob["pods"] = 3
+    with pytest.raises(ValueError, match="equal-size pods"):
+        api.FedSpec.from_json(blob)
+    blob = spec.to_json_dict()
+    blob["topology"] = "ring"
+    with pytest.raises(ValueError, match="unknown topology"):
+        api.FedSpec.from_json(blob)
+
+
+def test_spec_to_quantum_config_carries_cohort_knobs():
+    spec = _tree_spec(pod_assignment="strided", aggregation="average",
+                      participation_method="sampled")
+    cfg = spec.to_quantum_config()
+    assert (cfg.topology, cfg.pods, cfg.pod_assignment) == \
+        ("two_level", 2, "strided")
+    assert cfg.participation_method == "sampled"
+    back = api.FedSpec.from_quantum_config(cfg, n_per_node=2, n_test=2)
+    assert (back.topology, back.pods, back.pod_assignment) == \
+        ("two_level", 2, "strided")
+
+
+def test_classical_spec_rejects_two_level():
+    with pytest.raises(ValueError, match="quantum-only"):
+        api.FedSpec.classical("qwen1.5-4b", n_layers=1, num_nodes=4,
+                              nodes_per_round=2, node_batch=2, seq_len=16,
+                              topology="two_level", pods=2)
+
+
+def test_two_level_session_runs_and_resumes(tmp_path):
+    """End-to-end: a two_level session steps, checkpoints and resumes
+    bit-exactly (the topology rides the spec, not the checkpoint)."""
+    spec = _tree_spec(aggregation="average")
+    straight = api.FederationSession.create(spec, jax.random.PRNGKey(1))
+    straight.run(2)
+    killed = api.FederationSession.create(spec, jax.random.PRNGKey(1))
+    killed.run(1)
+    path = str(tmp_path / "tree.npz")
+    killed.save(path)
+    resumed = api.FederationSession.resume(path)
+    assert resumed.spec.topology == "two_level"
+    resumed.run(1)
+    assert_states_equal(resumed.state, straight.state)

@@ -177,6 +177,59 @@ def test_unknown_schedule_fails_loudly():
                                    schedule="round-robin")
 
 
+def test_sampled_composes_with_dropout_at_large_n():
+    """Floyd's sampler under the dropout schedule at cohort scale: the
+    draw stays a valid without-replacement subset (distinct indices even
+    after straggler masking) and the surviving data-volume weights
+    renormalize to 1."""
+    n = 4 * participation.SAMPLED_MIN
+    k = 8
+    sizes = jnp.arange(1.0, n + 1.0)
+    for seed in range(5):
+        sel, mask = participation.sample_nodes(
+            jax.random.PRNGKey(seed), n, k, schedule="dropout",
+            dropout_rate=0.4)  # method="auto" -> Floyd past SAMPLED_MIN
+        arr = np.asarray(sel)
+        assert len(set(arr.tolist())) == k
+        assert arr.min() >= 0 and arr.max() < n
+        m = np.asarray(mask)
+        assert set(m.tolist()) <= {0.0, 1.0}
+        w = participation.participation_weights(sizes[sel], mask)
+        expect = 1.0 if m.any() else 0.0  # all-dropped round: identity
+        np.testing.assert_allclose(float(np.asarray(w).sum()), expect,
+                                   atol=1e-5)
+
+
+def test_weighted_schedule_at_large_n_renormalizes():
+    """"weighted" stays dense by design (size-aware sampling needs every
+    N_n) but must still compose at cohort scale, pairing with UNIFORM
+    round weights that sum to 1 over the survivors."""
+    n = participation.SAMPLED_MIN + 1
+    sizes = jnp.arange(1.0, n + 1.0)
+    sel, mask = participation.sample_nodes(
+        jax.random.PRNGKey(2), n, 6, schedule="weighted",
+        node_sizes=sizes)
+    assert len(set(np.asarray(sel).tolist())) == 6
+    w = participation.round_weights("weighted", sizes[sel], mask)
+    np.testing.assert_allclose(np.asarray(w), np.full(6, 1 / 6), atol=1e-6)
+
+
+def test_dropout_auto_bit_parity_with_dense_below_threshold():
+    """Below SAMPLED_MIN the auto method must keep the original dense
+    draw bit-for-bit — composed schedules included (frozen parity runs
+    use dropout too)."""
+    for seed in range(4):
+        key = jax.random.PRNGKey(seed)
+        a_sel, a_mask = participation.sample_nodes(
+            key, 64, 4, schedule="dropout", dropout_rate=0.3)
+        d_sel, d_mask = participation.sample_nodes(
+            key, 64, 4, schedule="dropout", dropout_rate=0.3,
+            method="dense")
+        np.testing.assert_array_equal(np.asarray(a_sel), np.asarray(d_sel))
+        np.testing.assert_array_equal(np.asarray(a_mask),
+                                      np.asarray(d_mask))
+
+
 def test_participation_weights_data_volume_and_renormalization():
     sizes = jnp.array([2.0, 6.0])
     w = participation.participation_weights(sizes, jnp.ones(2))
