@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fed import faults as ffaults
 from repro.core.fed.api import phases
 from repro.core.fed.cohort import latency as flatency
 
@@ -74,14 +75,103 @@ class Scheduler:
 
 class SyncScheduler(Scheduler):
     """Lock-step Alg. 2 — bit-compatible with the pre-scheduler session:
-    one fused ``run_round`` per step, keyed by the round index."""
+    one fused ``run_round`` per step, keyed by the round index.
+
+    With fault injection (``FedSpec.fault_model``) or a round deadline
+    (``FedSpec.round_deadline``) active, the step runs the PHASED round
+    instead: dispatch, apply the deterministic per-(node, round) fault
+    effects at the transmit boundary, drop crashed/late uploads, and —
+    when fewer than ``min_participants`` survive — RE-DISPATCH the round
+    (fresh selection under ``fold_in(round_key, attempt)``, deadline
+    relaxed by ``retry_backoff`` per attempt) up to ``max_retries``
+    times before failing loud. Everything is a pure function of
+    (checkpointed round counter, fault_seed, latency_seed), so faulted
+    runs are deterministic and kill-and-resume stays bit-exact. The
+    fault-free path is the untouched fused round (same ops, same keys,
+    same empty metrics dict)."""
 
     name = "sync"
 
+    def __init__(self, spec, substrate):
+        super().__init__(spec, substrate)
+        self.faults = ffaults.make_model(spec)
+        self.deadline = getattr(spec, "round_deadline", None)
+        self.robust = self.faults is not None or self.deadline is not None
+        self.latency = (flatency.make_model(spec)
+                        if self.deadline is not None else None)
+
     def step(self, session) -> Dict[str, Any]:
+        if self.robust:
+            return self._robust_step(session)
         session.state, metrics = self.substrate.run_round(
             session.state, session.round_key(session.round), session.round)
         session.round += 1
+        return metrics
+
+    def _robust_step(self, session) -> Dict[str, Any]:
+        spec = self.spec
+        r = session.round
+        attempt = 0
+        while True:
+            # retries re-select under a fresh-but-deterministic key; the
+            # failed attempt's work is discarded (re-dispatch semantics)
+            key = session.round_key(r)
+            if attempt > 0:
+                key = jax.random.fold_in(key, attempt)
+            state, cohort, received, metrics = phases.dispatch_round(
+                self.substrate, session.state, key, r)
+            sel = np.asarray(jax.device_get(cohort.sel)).reshape(-1)
+            mask = np.asarray(jax.device_get(cohort.mask)).reshape(-1)
+            base_w = np.asarray(jax.device_get(cohort.weights),
+                                dtype=np.float64).reshape(-1)
+            coeff = np.ones(sel.shape[0])
+            survive = mask > 0.0
+            deadline = (None if self.deadline is None else
+                        self.deadline * spec.retry_backoff ** attempt)
+            for i in range(sel.shape[0]):
+                if not survive[i]:
+                    continue
+                node = int(sel[i])
+                c, drop, delay = (self.faults(node, r)
+                                  if self.faults is not None else ffaults.OK)
+                if drop:
+                    survive[i] = False
+                    continue
+                if deadline is not None:
+                    if float(self.latency(node, r)) * delay > deadline:
+                        survive[i] = False
+                        continue
+                coeff[i] = c
+            n_surv = int(survive.sum())
+            if n_surv >= spec.min_participants:
+                break
+            if attempt >= spec.max_retries:
+                raise RuntimeError(
+                    f"round {r}: {n_surv} of {sel.shape[0]} uploads "
+                    f"survived faults/deadline after {attempt + 1} "
+                    f"attempts (min_participants={spec.min_participants})"
+                    " — lower fault_rate, raise round_deadline, or raise "
+                    "max_retries")
+            attempt += 1
+        if self.faults is not None and bool(np.any(coeff != 1.0)):
+            # Byzantine coefficients perturb the uploads at the transmit
+            # boundary; a NaN coefficient ships a corrupt payload
+            # dead uploads zeroed outright (NaN * 0 would stay NaN)
+            cv = np.where(survive, coeff, 0.0)
+            received = jax.tree.map(
+                lambda x: (x * jnp.asarray(cv, x.real.dtype).reshape(
+                    (-1,) + (1,) * (x.ndim - 1))).astype(x.dtype),
+                received)
+        w = base_w * survive
+        w = w / max(w.sum(), 1e-12)
+        session.state = self.substrate.aggregate(
+            state, received, jnp.asarray(w, jnp.float32))
+        session.round += 1
+        metrics = dict(metrics)
+        metrics.update(n_selected=float(sel.shape[0]),
+                       n_survived=float(n_surv),
+                       n_quarantined=float(sel.shape[0] - n_surv),
+                       n_retries=float(attempt))
         return metrics
 
 
@@ -100,6 +190,10 @@ class AsyncScheduler(Scheduler):
         # (FedSpec.latency_model; "counter" reproduces the original
         # hardwired streams bit-exactly)
         self.latency = flatency.make_model(spec)
+        # fault injection + deadline semantics (pure in the checkpointed
+        # dispatch counter, so nothing extra rides in the checkpoint)
+        self.faults = ffaults.make_model(spec)
+        self.deadline = getattr(spec, "round_deadline", None)
         self.clock = 0.0
         self.dispatched = 0
         # each entry: one node's in-flight upload + its arrival metadata
@@ -111,35 +205,77 @@ class AsyncScheduler(Scheduler):
     def _latency(self, node: int, dispatch: int) -> float:
         return float(self.latency(node, dispatch))
 
-    def _dispatch(self, session) -> Dict[str, Any]:
-        """Send the next cohort to work against the CURRENT state."""
+    def _dispatch(self, session, wave: int = 0):
+        """Send the next cohort to work against the CURRENT state.
+        Returns ``(metrics, n_selected, n_buffered)`` — crashed nodes
+        and deadline misses are selected but never buffered. ``wave``
+        counts the re-dispatch waves of the current commit: each wave
+        relaxes the deadline by ``retry_backoff`` (capped at
+        ``max_retries`` relaxations), the async form of sync's retry."""
         d = self.dispatched
         session.state, cohort, received, metrics = phases.dispatch_round(
             self.substrate, session.state, session.round_key(d), d)
         sel = np.asarray(jax.device_get(cohort.sel)).reshape(-1)
         base_w = np.asarray(jax.device_get(cohort.weights),
                             dtype=np.float64).reshape(-1)
+        deadline = None
+        if self.deadline is not None:
+            deadline = self.deadline * self.spec.retry_backoff ** min(
+                wave, self.spec.max_retries)
+        n_buf = 0
         for i in range(sel.shape[0]):
             node = int(sel[i])
+            c, drop, delay = (self.faults(node, d)
+                              if self.faults is not None else ffaults.OK)
+            if drop:
+                continue
+            lat = self._latency(node, d) * delay
+            if deadline is not None and lat > deadline:
+                continue
+            up = phases.upload_slice(received, i)
+            if c != 1.0:  # True for NaN too
+                # the Byzantine coefficient perturbs the upload BEFORE
+                # buffering, so checkpoints carry the poisoned payload
+                # and mid-buffer resume needs no fault replay
+                up = jax.tree.map(
+                    lambda x: (x * jnp.asarray(c, x.real.dtype))
+                    .astype(x.dtype), up)
             # the timeline is kept float32-REPRESENTABLE so arrival
             # times survive the checkpoint's array round-trip bit-exactly
             # (restore may run under 32-bit jax)
             self.entries.append({
-                "arrival": float(np.float32(
-                    self.clock + self._latency(node, d))),
+                "arrival": float(np.float32(self.clock + lat)),
                 "version": session.round,   # commits seen at dispatch
                 "weight": float(base_w[i]),
                 "node": node,
                 "born": d,
-                "up": phases.upload_slice(received, i),
+                "up": up,
             })
+            n_buf += 1
         self.dispatched += 1
-        return metrics
+        return metrics, sel.shape[0], n_buf
 
     def step(self, session) -> Dict[str, Any]:
         metrics: Dict[str, Any] = {}
+        n_sel = n_buf = 0
+        # dispatches needed to fill the buffer with NO losses; waves
+        # beyond the first are the retry budget before failing loud
+        base = max(1, -(-self.commit_k // self.spec.nodes_per_round))
+        cap = (getattr(self.spec, "max_retries", 2) + 1) * base + 8
+        dispatches = 0
         while len(self.entries) < self.commit_k:
-            metrics = self._dispatch(session)
+            if dispatches >= cap:
+                raise RuntimeError(
+                    f"async commit starved: {dispatches} cohort "
+                    f"dispatches filled only {len(self.entries)}/"
+                    f"{self.commit_k} buffer slots — faults/deadline "
+                    "drop (nearly) every upload; lower fault_rate, raise "
+                    "round_deadline or max_retries, or lower async_commit")
+            metrics, s, b = self._dispatch(session,
+                                           wave=dispatches // base)
+            n_sel += s
+            n_buf += b
+            dispatches += 1
         order = sorted(range(len(self.entries)),
                        key=lambda j: (self.entries[j]["arrival"],
                                       self.entries[j]["born"],
@@ -162,6 +298,11 @@ class AsyncScheduler(Scheduler):
         metrics.update(sched_clock=self.clock,
                        sched_staleness=float(stale.mean()),
                        sched_buffered=float(len(self.entries)))
+        if self.faults is not None or self.deadline is not None:
+            metrics.update(n_selected=float(n_sel),
+                           n_survived=float(n_buf),
+                           n_quarantined=float(n_sel - n_buf),
+                           n_retries=float(max(0, dispatches - base)))
         return metrics
 
     def flush(self, session) -> None:

@@ -45,7 +45,16 @@ _NON_GROUPING_FIELDS = ("eta", "eps", "server_momentum", "data_seed",
                         "data_noise", "data_iid", "latency_seed",
                         "latency_model", "latency_mu", "latency_sigma",
                         "latency_alpha", "latency_trace",
-                        "n_test", "eval_batch")
+                        "n_test", "eval_batch",
+                        # fault/deadline knobs perturb the TIMELINE, not
+                        # the compiled round (fault/deadline sessions run
+                        # sequentially in serve anyway); the defense
+                        # knobs stay grouping — they change the
+                        # aggregate computation itself
+                        "fault_model", "fault_rate", "fault_seed",
+                        "fault_scale", "fault_trace", "round_deadline",
+                        "max_retries", "retry_backoff",
+                        "min_participants")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +89,23 @@ class FedSpec:
     latency_sigma: float = 0.5        # lognormal scale (> 0)
     latency_alpha: float = 1.5        # pareto tail index (> 1)
     latency_trace: Optional[str] = None   # trace: path to a trace file
+    # --- robust aggregation defenses (strategies.DEFENSES) -------------
+    defense: Optional[str] = None     # clip | trimmed_mean | median | screen
+    trim_frac: float = 0.2            # trimmed_mean: trim fraction/side
+    clip_norm: float = 1.0            # clip: per-matrix Frobenius bound
+    screen_tol: float = 0.05          # screen: allowed fidelity drop
+    # --- fault injection (faults registry) -----------------------------
+    fault_model: Optional[str] = None     # crash | stale | corrupt |
+    #                                       sign_flip | scale | slow | trace
+    fault_rate: float = 0.0           # Bernoulli rate of the draw models
+    fault_seed: int = 0               # fault stream seed
+    fault_scale: float = 3.0          # Byzantine coeff / slow multiplier
+    fault_trace: Optional[str] = None     # trace: fault schedule file
+    # --- deadline/retry semantics (sync + async schedulers) ------------
+    round_deadline: Optional[float] = None    # sim-time upload deadline
+    max_retries: int = 2              # re-dispatch attempts per round
+    retry_backoff: float = 2.0        # deadline multiplier per retry
+    min_participants: int = 1         # survivors needed to commit
     # --- server-side outer optimizer (server_opt registry) -------------
     server_opt: str = "none"          # "none" | "momentum" | "nesterov"
     server_momentum: float = 0.9
@@ -123,12 +149,14 @@ class FedSpec:
             raise ValueError(f"unknown substrate {self.substrate!r}; "
                              f"registered: {list(SUBSTRATES)}")
         # fail-loud registry validation at construction time
+        from repro.core.fed import faults as ffaults
         from repro.core.fed import server_opt as fserver_opt
         from repro.core.fed.api import scheduler as fscheduler
         from repro.core.fed.cohort import latency as flatency
         from repro.core.fed.cohort import topology as ftopology
 
         agg = strategies.get_aggregation(self.aggregation)
+        strategies.validate_defense(self.defense, agg.combine)
         participation.validate(self.participation)
         participation.validate_method(self.participation_method)
         fchannel.resolve_channel(self.upload_noise, self.quantize_bits)
@@ -139,6 +167,43 @@ class FedSpec:
             nodes_per_round=self.nodes_per_round, combine=agg.combine,
             schedule=self.schedule, async_commit=self.async_commit)
         flatency.validate_spec(self)
+        ffaults.validate_spec(self)
+        if self.defense == "trimmed_mean" and not (
+                0.0 < self.trim_frac < 0.5):
+            raise ValueError(f"trim_frac must be in (0, 0.5) — trimming "
+                             f"half per side leaves nothing — got "
+                             f"{self.trim_frac}")
+        if self.defense == "clip" and not self.clip_norm > 0.0:
+            raise ValueError(f"clip_norm must be > 0, got {self.clip_norm}")
+        if self.defense == "screen" and not self.screen_tol >= 0.0:
+            raise ValueError(f"screen_tol must be >= 0, got "
+                             f"{self.screen_tol}")
+        if (self.defense in ("trimmed_mean", "median")
+                and self.topology != "flat"):
+            raise ValueError(
+                f"defense {self.defense!r} needs every upload at the "
+                "server (order statistics do not decompose over pod "
+                "partial sums) — topology='flat' only")
+        if self.round_deadline is not None and not self.round_deadline > 0:
+            raise ValueError(f"round_deadline must be > 0, got "
+                             f"{self.round_deadline}")
+        if self.schedule == "overlapped" and (
+                self.fault_model is not None
+                or self.round_deadline is not None):
+            raise ValueError(
+                "fault injection / round deadlines are not defined for "
+                "the overlapped scheduler (its staleness-1 pipeline has "
+                "no per-node timeline) — use schedule='sync' or 'async'")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got "
+                             f"{self.max_retries}")
+        if not self.retry_backoff >= 1.0:
+            raise ValueError(f"retry_backoff must be >= 1.0 (deadlines "
+                             f"must not shrink), got {self.retry_backoff}")
+        if not 1 <= self.min_participants <= self.nodes_per_round:
+            raise ValueError(
+                f"min_participants ({self.min_participants}) must be in "
+                f"[1, nodes_per_round={self.nodes_per_round}]")
         if self.server_opt != "none" and agg.combine != "average":
             raise ValueError(
                 f"server_opt {self.server_opt!r} smooths the aggregated "
@@ -308,7 +373,9 @@ class FedSpec:
             rank_cap=self.rank_cap, ensemble_dtype=self.ensemble_dtype,
             participation_method=self.participation_method,
             topology=self.topology, pods=self.pods,
-            pod_assignment=self.pod_assignment)
+            pod_assignment=self.pod_assignment, defense=self.defense,
+            trim_frac=self.trim_frac, clip_norm=self.clip_norm,
+            screen_tol=self.screen_tol)
 
     @classmethod
     def from_quantum_config(cls, cfg, **data_recipe) -> "FedSpec":
@@ -326,7 +393,9 @@ class FedSpec:
             rank_cap=cfg.rank_cap, ensemble_dtype=cfg.ensemble_dtype,
             participation_method=cfg.participation_method,
             topology=cfg.topology, pods=cfg.pods,
-            pod_assignment=cfg.pod_assignment, **data_recipe)
+            pod_assignment=cfg.pod_assignment, defense=cfg.defense,
+            trim_frac=cfg.trim_frac, clip_norm=cfg.clip_norm,
+            screen_tol=cfg.screen_tol, **data_recipe)
 
     def to_classical_config(self) -> FederatedConfig:
         """The legacy ``FederatedConfig`` this spec denotes."""

@@ -127,6 +127,10 @@ class QuantumSubstrate:
                 n_test=spec.n_test, node_sizes=spec.node_sizes)
         self.dataset = dataset
         self.test = test
+        # defense="screen" scores each upload on a server probe batch —
+        # the held-out test pairs double as the probe
+        self._probe = ((test[0], test[1]) if spec.defense == "screen"
+                       else None)
         # flattened train view for evaluation (padded slots masked out)
         self._train_in = dataset.phi_in.reshape(-1, dataset.phi_in.shape[-1])
         self._train_out = dataset.phi_out.reshape(
@@ -166,7 +170,7 @@ class QuantumSubstrate:
         params, smom, bound = fed.server_round_certified(
             self._params_of(state), self.dataset, key, self.cfg,
             smom=self._smom_of(state), server_opt=self.spec.server_opt,
-            server_beta=self.spec.server_momentum)
+            server_beta=self.spec.server_momentum, probe=self._probe)
         if not self._certified:
             return self._pack(params, smom), {}
         err = self._err_of(state) + bound
@@ -213,7 +217,7 @@ class QuantumSubstrate:
         params, smom = fed.aggregate_phase(
             self._params_of(state), received, weights, self.cfg,
             smom=self._smom_of(state), server_opt=self.spec.server_opt,
-            server_beta=self.spec.server_momentum)
+            server_beta=self.spec.server_momentum, probe=self._probe)
         return self._pack(params, smom, self._err_of(state))
 
     def upload_restore(self, flat: Dict[str, Any]):
@@ -435,7 +439,9 @@ class ClassicalSubstrate:
     def aggregate(self, state, received, weights: jax.Array):
         params, sopt = fed_step.aggregate_deltas(
             state["params"], received, weights, self.spec.outer_lr,
-            server_sgd=self._server_sgd, server_state=state.get("sopt"))
+            server_sgd=self._server_sgd, server_state=state.get("sopt"),
+            defense=self.spec.defense, trim_frac=self.spec.trim_frac,
+            clip_norm=self.spec.clip_norm)
         state = dict(state, params=params)
         if self._server_sgd is not None:
             state["sopt"] = sopt

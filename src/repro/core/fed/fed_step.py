@@ -70,7 +70,9 @@ def node_uploads(loss_fn: Callable, opt, params, opt_states_nodes,
 
 
 def aggregate_deltas(params, deltas, w: jax.Array, outer_lr,
-                     server_sgd=None, server_state=None):
+                     server_sgd=None, server_state=None,
+                     defense: Optional[str] = None, trim_frac: float = 0.2,
+                     clip_norm: float = 1.0):
     """The AGGREGATE phase: weighted-mean the node deltas (Eq. 8) and
     apply with the outer LR — directly, or through the server-side
     outer optimizer (``repro.core.fed.server_opt``) when ``server_sgd``
@@ -78,7 +80,27 @@ def aggregate_deltas(params, deltas, w: jax.Array, outer_lr,
 
     The leading axis of ``deltas`` is whatever set of uploads is being
     committed — the full cohort in a sync round, K buffered uploads in
-    an async commit."""
+    an async commit.
+
+    ``defense`` hardens the mean against hostile uploads
+    (``strategies.DEFENSES``, additive modes only): "clip" norm-clips
+    each node's per-leaf delta to ``clip_norm`` and de-weights
+    non-finite uploads; "trimmed_mean"/"median" replace the weighted
+    mean with the coordinate-wise order statistic over the valid
+    (positively weighted, finite) nodes."""
+    strategies.validate_defense(defense, "average")
+    if defense == "clip":
+        fin = strategies.finite_nodes(deltas)
+        w = w * fin.astype(w.dtype)
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+        deltas = jax.tree.map(
+            lambda d: jnp.where(
+                fin.reshape((-1,) + (1,) * (d.ndim - 1)),
+                d * strategies.clip_factors(
+                    d, clip_norm,
+                    axes=tuple(range(1, d.ndim))).astype(d.dtype),
+                jnp.zeros((), d.dtype)),
+            deltas)
 
     def mean_leaf(d):
         # weight per node BEFORE the sum so the cross-pod all-reduce
@@ -87,7 +109,13 @@ def aggregate_deltas(params, deltas, w: jax.Array, outer_lr,
         wn = w.astype(d.dtype).reshape((-1,) + (1,) * (d.ndim - 1))
         return jnp.sum(d * wn, axis=0)             # cross-pod all-reduce
 
-    mean_d = jax.tree.map(mean_leaf, deltas)
+    if defense in ("trimmed_mean", "median"):
+        valid = (w > 0) & strategies.finite_nodes(deltas)
+        mean_d = jax.tree.map(
+            lambda d: strategies.robust_combine(d, valid, defense,
+                                                trim_frac), deltas)
+    else:
+        mean_d = jax.tree.map(mean_leaf, deltas)
     if server_sgd is None:
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32)

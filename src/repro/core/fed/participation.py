@@ -22,7 +22,9 @@ Schedules:
   independently drops out with probability ``dropout_rate``
   (straggler/failure masking). A dropped node's update is zeroed by the
   returned mask and its data-volume weight is renormalized over the
-  survivors by ``participation_weights``.
+  survivors by ``participation_weights``. An all-dropped draw is
+  re-drawn deterministically (fold_in key chain) until at least one
+  node survives, so the weight mass is never zero.
 
 ``sample_nodes`` returns ``(sel, mask)``: ``sel`` the (N_p,) selected
 node indices and ``mask`` a (N_p,) float32 participation mask (1.0 =
@@ -148,19 +150,41 @@ def sample_nodes(key: jax.Array, num_nodes: int, nodes_per_round: int, *,
         sel = jax.random.choice(key, num_nodes, (nodes_per_round,),
                                 replace=False, p=p)
         return sel, ones
-    # dropout: uniform selection, then independent straggler masking
+    # dropout: uniform selection, then independent straggler masking.
+    # An all-dropped draw would leave a zero weight mass downstream
+    # (identity round at best, 0/0 at worst), so the mask is re-drawn —
+    # deterministically, on fold_in successors of the same key — until
+    # at least one survivor remains. Rounds with any survivor keep the
+    # first draw bit-for-bit.
     k_sel, k_drop = jax.random.split(key)
     sel = _uniform_choice(k_sel, num_nodes, nodes_per_round, method)
-    mask = (jax.random.uniform(k_drop, (nodes_per_round,))
-            >= dropout_rate).astype(jnp.float32)
+
+    def draw(k):
+        return (jax.random.uniform(k, (nodes_per_round,))
+                >= dropout_rate).astype(jnp.float32)
+
+    def all_dropped(carry):
+        _, mask = carry
+        return jnp.sum(mask) == 0.0
+
+    def redraw(carry):
+        k, _ = carry
+        return jax.random.fold_in(k, 1), draw(k)
+
+    if dropout_rate >= 1.0:
+        raise ValueError(f"dropout_rate must be < 1.0 (every node would "
+                         f"drop every round), got {dropout_rate}")
+    _, mask = jax.lax.while_loop(
+        all_dropped, redraw, (jax.random.fold_in(k_drop, 1), draw(k_drop)))
     return sel, mask
 
 
 def participation_weights(node_sizes: jax.Array, mask: jax.Array
                           ) -> jax.Array:
     """Alg. 2 data-volume weights w_n = N_n / N_t, renormalized over the
-    nodes that actually participated (mask 1.0). All-dropped rounds give
-    all-zero weights — the aggregate becomes the identity update."""
+    nodes that actually participated (mask 1.0). ``sample_nodes`` never
+    returns an all-dropped mask (it re-draws), so the guarded
+    denominator only defends ad-hoc callers passing their own masks."""
     w = mask * node_sizes.astype(jnp.float32)
     return w / jnp.maximum(jnp.sum(w), 1e-12)
 

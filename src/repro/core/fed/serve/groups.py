@@ -25,7 +25,7 @@ both kinds side by side.
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,11 @@ def group_mode(spec: FedSpec,
     quantum substrate, sync schedule, fold-in round keys — else
     "sequential"."""
     if spec.substrate != "quantum" or spec.schedule != "sync":
+        return "sequential"
+    if spec.fault_model is not None or spec.round_deadline is not None:
+        # the robust sync path (fault effects, deadline retries) is a
+        # host-side per-session loop — not expressible as one vmapped
+        # round body
         return "sequential"
     if session is not None and session.round_keys is not None:
         return "sequential"  # explicit key plans are per-session state
@@ -82,11 +87,32 @@ def _slot_read(bufs, i: jax.Array):
         bufs)
 
 
+@jax.jit
+def _slot_finite(params):
+    """(S,) bool: every layer buffer of the slot is fully finite —
+    ``jnp.isfinite`` on complex is finite-in-both-parts."""
+    fin = None
+    for p in params:
+        f = jnp.all(jnp.isfinite(p).reshape(p.shape[0], -1), axis=1)
+        fin = f if fin is None else (fin & f)
+    return fin
+
+
+def _state_finite(session) -> bool:
+    """True when every inexact leaf of the session state is finite."""
+    for x in jax.tree.leaves(session.state):
+        x = jnp.asarray(x)
+        if (jnp.issubdtype(x.dtype, jnp.inexact)
+                and not bool(jnp.all(jnp.isfinite(x)))):
+            return False
+    return True
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "server_opt", "k"),
                    donate_argnums=(0, 1, 2))
 def _serve_tick(params, smom, err, data, base_keys, rounds, active,
-                targets, eta, eps, beta, cfg, server_opt, k):
+                targets, eta, eps, beta, probe, cfg, server_opt, k):
     """One WHOLE serving tick as a single dispatch: a ``lax.scan`` of
     ``k`` federation rounds, each with per-slot round keys
     (``fold_in(base, t)`` — the exact ``FederationSession.round_key``
@@ -110,7 +136,7 @@ def _serve_tick(params, smom, err, data, base_keys, rounds, active,
         keys = jax.vmap(jax.random.fold_in)(base_keys, rounds)
         new_p, new_m, err_r = fed.server_round_stacked(
             params, data, keys, cfg, smom=smom, eta=eta, eps=eps,
-            server_opt=server_opt, server_beta=beta)
+            server_opt=server_opt, server_beta=beta, probe=probe)
 
         def mrg(n, o):
             m = live.reshape((-1,) + (1,) * (n.ndim - 1))
@@ -160,6 +186,9 @@ class StackedGroup:
         self._err = None      # (S,) running certificates
         self._data = None     # stacked QuantumDataset
         self._keys = None     # (S, 2) uint32 base keys
+        self._probe = None    # stacked screening batch (defense="screen")
+        # (slot, diagnostic) pairs the server quarantines after a tick
+        self._faulted = []
 
     # -- seating --------------------------------------------------------
     def _init_buffers(self, session: FederationSession) -> None:
@@ -180,6 +209,9 @@ class StackedGroup:
         self._data = jax.tree.map(lambda x: _tile(x, s),
                                   session.substrate.dataset)
         self._keys = _tile(jnp.asarray(session.key), s)
+        probe = getattr(session.substrate, "_probe", None)
+        if probe is not None:
+            self._probe = jax.tree.map(lambda x: _tile(x, s), probe)
 
     def seat(self, slot: int, session: FederationSession,
              target: Optional[int] = None) -> None:
@@ -193,14 +225,16 @@ class StackedGroup:
             self._init_buffers(session)
         params, smom, err = session.substrate.state_parts(session.state)
         bufs = (self._params, self._smom, self._err, self._data,
-                self._keys)
+                self._keys, self._probe)
         vals = (list(params),
                 list(smom) if self.with_smom else None,
                 err if self.certified else None,
                 session.substrate.dataset,
-                jnp.asarray(session.key))
+                jnp.asarray(session.key),
+                (getattr(session.substrate, "_probe", None)
+                 if self._probe is not None else None))
         (self._params, self._smom, self._err, self._data,
-         self._keys) = _slot_write(bufs, vals, np.int32(slot))
+         self._keys, self._probe) = _slot_write(bufs, vals, np.int32(slot))
         self.rounds[slot] = session.round
         # sentinel survives the int32 device cast in step()
         self._targets[slot] = (np.iinfo(np.int32).max if target is None
@@ -249,11 +283,24 @@ class StackedGroup:
             self._params, self._smom, self._err, self._data, self._keys,
             jnp.asarray(self.rounds, jnp.int32), jnp.asarray(active),
             jnp.asarray(self._targets, jnp.int32), jnp.asarray(self._eta),
-            jnp.asarray(self._eps), jnp.asarray(self._beta), self.cfg,
-            self.spec.server_opt, k)
+            jnp.asarray(self._eps), jnp.asarray(self._beta), self._probe,
+            self.cfg, self.spec.server_opt, k)
         self.rounds[active] = np.minimum(self.rounds[active] + k,
                                          self._targets[active])
+        # failure isolation: a slot whose model went non-finite (corrupt
+        # data, numerical blow-up) is flagged for the server to
+        # quarantine — the vmapped tick already kept it from touching
+        # any other slot's buffers
+        fin = np.asarray(jax.device_get(_slot_finite(self._params)))
+        for slot in np.nonzero(active & ~fin)[0]:
+            self._faulted.append(
+                (int(slot), "non-finite model state after stacked tick"))
         return n
+
+    def take_faulted(self):
+        """Drain the (slot, diagnostic) pairs flagged by ``step``."""
+        out, self._faulted = self._faulted, []
+        return out
 
 
 class SequentialGroup:
@@ -270,6 +317,7 @@ class SequentialGroup:
         self.rounds_per_tick = rounds_per_tick
         self.sessions: Dict[int, FederationSession] = {}
         self._targets: Dict[int, Optional[int]] = {}
+        self._faulted: List[Tuple[int, str]] = []
 
     def seat(self, slot: int, session: FederationSession,
              target: Optional[int] = None) -> None:
@@ -293,18 +341,36 @@ class SequentialGroup:
 
     def step(self) -> int:
         n = 0
+        check_finite = self.spec.fault_model is not None
         for slot, sid in enumerate(self.grid.sid):
             if sid is None:
                 continue
+            if any(slot == s for s, _ in self._faulted):
+                continue  # already flagged; server will quarantine it
             session = self.sessions[slot]
             target = self._targets.get(slot)
             todo = self.rounds_per_tick
             if target is not None:
                 todo = min(todo, max(target - session.round, 0))
-            for _ in range(todo):
-                session.step()
+            try:
+                for _ in range(todo):
+                    session.step()
+            except RuntimeError as e:
+                # deadline/retry exhaustion or commit starvation: isolate
+                # this session, keep serving the rest of the grid
+                self._faulted.append((slot, f"{type(e).__name__}: {e}"))
+                continue
+            if check_finite and not _state_finite(session):
+                self._faulted.append(
+                    (slot, "non-finite model state after step"))
+                continue
             n += 1
         return n
+
+    def take_faulted(self):
+        """Drain the (slot, diagnostic) pairs flagged by ``step``."""
+        out, self._faulted = self._faulted, []
+        return out
 
 
 def make_group(spec: FedSpec, mode: str, n_slots: int,

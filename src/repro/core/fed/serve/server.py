@@ -77,6 +77,10 @@ class FederationServer:
         self._group_of: Dict[str, str] = {}     # sid -> group key
         self._target: Dict[str, int] = {}       # sid -> absolute round
         self.done: set = set()
+        # sid -> diagnostic for sessions pulled off the grid after a
+        # fault (non-finite state, deadline/retry exhaustion); their
+        # last good-or-bad state is parked for inspection
+        self.quarantined: Dict[str, str] = {}
         self._seq = 0
         self.ticks = 0
 
@@ -126,7 +130,7 @@ class FederationServer:
         up to ``rounds_per_tick`` rounds per occupied slot (one STACKED
         dispatch per stacked group), retire spent tenants. Returns tick
         stats."""
-        admitted = stepped = retired = 0
+        admitted = stepped = retired = quarantined = 0
         for group in self.groups.values():
             claims = []
             for slot, sid in group.grid.admit():
@@ -136,6 +140,19 @@ class FederationServer:
             group.seat_many(claims)             # one scatter per wave
             admitted += len(claims)
             stepped += group.step()
+            # failure isolation: a faulted tenant is pulled off the grid
+            # BEFORE retirement so its slot frees for the next in line;
+            # its state (possibly poisoned) parks to disk for inspection
+            # and the diagnostic lands in ``quarantined``
+            for slot, diag in group.take_faulted():
+                sid = group.grid.sid[slot]
+                if sid is None:
+                    continue
+                group.unseat(slot)
+                self.store.unpin(sid)
+                self.store.park(sid)
+                self.quarantined[sid] = diag
+                quarantined += 1
             for slot, sid in enumerate(group.grid.sid):
                 if sid is None:
                     continue
@@ -146,7 +163,8 @@ class FederationServer:
                     retired += 1
         self.ticks += 1
         return {"admitted": admitted, "stepped": stepped,
-                "retired": retired, "pending": self.n_pending}
+                "retired": retired, "quarantined": quarantined,
+                "pending": self.n_pending}
 
     def drain(self, max_ticks: int = 1_000_000) -> int:
         """Tick until every submitted tenant is done; returns ticks

@@ -27,7 +27,7 @@ once instead of per-stack.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -112,3 +112,124 @@ def wire_cast(tree, agg: Aggregation):
         return x.astype(wd)
 
     return jax.tree.map(cast, tree)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust defenses
+# ---------------------------------------------------------------------------
+# A defense names HOW the server hardens the combine against hostile or
+# corrupted uploads (core/fed/faults.py injects them). Each defense is
+# pinned to the combine whose algebra it is defined on: the additive
+# Eq. 8 mean admits coordinate-wise order statistics and norm clipping;
+# the non-commutative Eq. 6 product admits none of those, so its only
+# registered defense is behavioral — screen each upload's post-update
+# fidelity on a server probe batch and quarantine the ones that crater.
+#
+#   "clip"         (average) — per-matrix Frobenius norm-clip to
+#                   clip_norm, non-finite uploads zeroed + de-weighted.
+#   "trimmed_mean" (average) — coordinate-wise trimmed mean: drop the
+#                   trim_frac smallest/largest values per coordinate.
+#   "median"       (average) — coordinate-wise median (trim limit).
+#   "screen"       (product) — fidelity-screened Eq. 6: uploads whose
+#                   candidate fidelity falls > screen_tol below the
+#                   pre-round baseline are quarantined (weight 0).
+DEFENSES: Dict[str, str] = {
+    "clip": "average",
+    "trimmed_mean": "average",
+    "median": "average",
+    "screen": "product",
+}
+
+
+def validate_defense(name: Optional[str], combine: str) -> Optional[str]:
+    """Fail-loud check that a defense exists and matches the combine it
+    is defined on (product-combine only composes with the screened
+    variant; the order-statistic/clipping defenses are additive-only)."""
+    if name is None:
+        return None
+    try:
+        need = DEFENSES[name]
+    except KeyError:
+        raise ValueError(f"unknown defense {name!r}; registered: "
+                         f"{sorted(DEFENSES)}") from None
+    if combine != need:
+        raise ValueError(
+            f"defense {name!r} is defined on combine={need!r} uploads, "
+            f"not combine={combine!r}"
+            + (" — product aggregation composes with a defense only via "
+               "the fidelity-screened variant (defense='screen')"
+               if combine == "product" else ""))
+    return name
+
+
+def finite_nodes(uploads) -> jnp.ndarray:
+    """(n,) bool: node i's upload is finite in EVERY leaf coordinate.
+    ``uploads`` is a pytree whose leaves carry a leading node axis."""
+    leaves = jax.tree.leaves(uploads)
+    fin = jnp.ones((leaves[0].shape[0],), bool)
+    for x in leaves:
+        fin = fin & jnp.all(jnp.isfinite(x).reshape(x.shape[0], -1), axis=1)
+    return fin
+
+
+def clip_factors(x: jnp.ndarray, clip_norm: float,
+                 axes: Tuple[int, ...] = (-2, -1)) -> jnp.ndarray:
+    """Per-slice scaling factors min(1, clip_norm / ||x||_F) over
+    ``axes`` (kept as size-1 dims so the result broadcasts back onto
+    ``x``). Real-valued even for complex ``x``; non-finite slices get a
+    factor of 0 by convention (callers also de-weight them)."""
+    sq = jnp.sum(jnp.abs(x) ** 2, axis=axes, keepdims=True)
+    norms = jnp.sqrt(jnp.maximum(sq, 0.0))
+    f = jnp.minimum(1.0, clip_norm / jnp.maximum(norms, 1e-30))
+    return jnp.where(jnp.isfinite(norms), f, 0.0).real
+
+
+def _rank_weights(n_eff: jnp.ndarray, n: int, kind: str, trim_frac: float,
+                  dtype) -> jnp.ndarray:
+    """(n,) weights over the SORTED valid values (invalid entries sort to
+    the top as +inf): rank r of n_eff valid values gets trimmed-mean
+    weight 1/(n_eff - 2t) for t <= r < n_eff - t, or median weight (the
+    mean of the middle one/two ranks). All-invalid columns (n_eff == 0)
+    get all-zero weights instead of dividing by zero."""
+    r = jnp.arange(n)
+    if kind == "trimmed_mean":
+        # never trim away everything: t <= (n_eff - 1) // 2
+        t = jnp.minimum(jnp.floor(trim_frac * n_eff).astype(r.dtype),
+                        (n_eff - 1) // 2)
+        keep = (r >= t) & (r < n_eff - t)
+        w = keep.astype(dtype) / jnp.maximum(n_eff - 2 * t, 1).astype(dtype)
+    elif kind == "median":
+        lo, hi = (n_eff - 1) // 2, n_eff // 2
+        w = 0.5 * ((r == lo).astype(dtype) + (r == hi).astype(dtype))
+    else:
+        raise ValueError(f"unknown rank-weight kind {kind!r}")
+    return w * (n_eff > 0).astype(dtype)
+
+
+def robust_combine(x: jnp.ndarray, valid: jnp.ndarray, kind: str,
+                   trim_frac: float) -> jnp.ndarray:
+    """Coordinate-wise trimmed mean / median over the leading node axis,
+    restricted to ``valid`` nodes (weight > 0 and finite uploads).
+
+    Complex inputs are reduced per real/imag part. Order statistics act
+    coordinate-wise, so Hermitian generator stacks stay Hermitian: the
+    real part is symmetric (i,j and j,i see the same value multiset →
+    same trim set), the imaginary part antisymmetric (j,i sees the
+    negated multiset → the mirrored trim set, negated result). The
+    invalid slots are sorted to +inf and the rank weights never reach
+    them; a 0-weight rank is also masked out of the sum so an inf/NaN
+    payload cannot leak through 0 * inf.
+    """
+    n = x.shape[0]
+    n_eff = jnp.sum(valid.astype(jnp.int32))
+
+    def real_part(xr):
+        vb = valid.reshape((n,) + (1,) * (xr.ndim - 1))
+        xs = jnp.sort(jnp.where(vb, xr, jnp.inf), axis=0)
+        w = _rank_weights(n_eff, n, kind, trim_frac, xr.dtype)
+        wb = w.reshape((n,) + (1,) * (xr.ndim - 1))
+        return jnp.sum(wb * jnp.where(wb > 0, xs, 0), axis=0)
+
+    if jnp.issubdtype(x.dtype, jnp.complexfloating):
+        return (real_part(x.real) + 1j * real_part(x.imag)).astype(x.dtype)
+    return real_part(x)

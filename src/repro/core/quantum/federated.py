@@ -105,6 +105,13 @@ class QuantumFedConfig(NamedTuple):
     rank_tol: float = 0.0             # relative singular-value threshold
     rank_cap: Optional[int] = None    # absolute per-compression rank cap
     ensemble_dtype: Optional[str] = None  # None | "f32" | "bf16" storage
+    # Byzantine-robust aggregation defense (strategies.DEFENSES):
+    # "clip" | "trimmed_mean" | "median" harden the Eq. 8 mean;
+    # "screen" quarantines Eq. 6 uploads by probe-batch fidelity.
+    defense: Optional[str] = None
+    trim_frac: float = 0.2            # trimmed_mean: trim fraction/side
+    clip_norm: float = 1.0            # clip: per-matrix Frobenius bound
+    screen_tol: float = 0.05          # screen: allowed fidelity drop
 
 
 def _approx_on(cfg: QuantumFedConfig) -> bool:
@@ -359,10 +366,13 @@ def _factors_survive_wire(cfg: QuantumFedConfig) -> bool:
     """True when the node pass's eigh factors are still valid at the
     aggregate phase: product combine (the only mode exponentiating the
     per-node K's) with an exact-identity transmit phase — full-precision
-    wire, no channel noise, no quantization."""
+    wire, no channel noise, no quantization — and no defense (the
+    screened product re-scales quarantined uploads, so the factors of
+    the raw K's must not short-circuit it)."""
     agg = strategies.get_aggregation(cfg.aggregation)
     return (agg.combine == "product" and agg.wire_dtype is None
-            and cfg.upload_noise == 0.0 and cfg.quantize_bits is None)
+            and cfg.upload_noise == 0.0 and cfg.quantize_bits is None
+            and cfg.defense is None)
 
 
 def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
@@ -374,32 +384,123 @@ def _transmit_impl(ks_all: List[jax.Array], key: jax.Array,
     return strategies.wire_cast(ks_all, agg)
 
 
+def _probe_fidelity(params: qnn.Params, probe, widths, impl):
+    """Mean fidelity of ``params`` on the server's probe batch."""
+    phi_in, phi_out = probe
+    rho = qnn.outputs(params, phi_in, widths, impl=impl)
+    return jnp.mean(qnn.batched_fidelity(phi_out, rho, impl=impl))
+
+
+def _screen_uploads(params: qnn.Params, ks_all: List[jax.Array],
+                    weights: jax.Array, eps, cfg: QuantumFedConfig, probe):
+    """defense="screen": the behavioral defense for the non-commutative
+    Eq. 6 product (order statistics have no meaning there). Each node's
+    CANDIDATE model — its own update chain e^{i eps K_{n,k}} applied to
+    the global params — is scored on the server's probe batch; uploads
+    whose fidelity falls more than ``screen_tol`` below the pre-round
+    baseline are quarantined: weight zeroed (mass renormalized over the
+    survivors) and generators zeroed so a NaN payload cannot reach the
+    eigh. A NaN candidate fidelity compares False and self-quarantines.
+    Returns ``(clean_ks_all, new_weights, keep)``."""
+    if probe is None:
+        raise ValueError(
+            "defense='screen' needs a server probe batch — drive the "
+            "round through QuantumSubstrate (it passes its held-out test "
+            "pairs) or pass probe=(phi_in, phi_out) explicitly")
+    base = _probe_fidelity(params, probe, cfg.widths, cfg.impl)
+
+    def one(ks_n):  # per-node slice of every layer's (I_l, m, d, d)
+        cand = [_chain(us, ql.expm_herm(kn, eps), cfg.impl)
+                for us, kn in zip(params, ks_n)]
+        return _probe_fidelity(cand, probe, cfg.widths, cfg.impl)
+
+    fids = jax.vmap(one)(ks_all)                 # (N_p,)
+    keep = fids >= base - cfg.screen_tol         # NaN fid => False
+    w = weights * keep.astype(weights.dtype)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    clean = [jnp.where(keep.reshape((-1,) + (1,) * (ks.ndim - 1)),
+                       ks, jnp.zeros((), ks.dtype)) for ks in ks_all]
+    return clean, w, keep
+
+
+def _clip_uploads(ks_all: List[jax.Array], weights: jax.Array,
+                  clip_norm: float):
+    """defense="clip": per-matrix Frobenius norm-clip of every uploaded
+    generator; non-finite uploads are zeroed and de-weighted (their mass
+    renormalized over the finite nodes). Returns ``(clean, weights)``."""
+    fin = strategies.finite_nodes(ks_all)
+    w = weights * fin.astype(weights.dtype)
+    w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    clean = []
+    for ks in ks_all:
+        f = strategies.clip_factors(ks, clip_norm)  # (..., 1, 1) real
+        fb = fin.reshape((-1,) + (1,) * (ks.ndim - 1))
+        clean.append(jnp.where(fb, ks * f.astype(ks.real.dtype),
+                               jnp.zeros((), ks.dtype)))
+    return clean, w
+
+
 def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
                     weights: jax.Array, eps, server_beta,
                     cfg: QuantumFedConfig, server_opt: str, factors=None,
-                    mesh=None):
+                    mesh=None, probe=None):
     """Strategy combine; with ``server_opt`` != "none" the averaged
     Hermitian generators K̄_k pass through server momentum first (state
     ``smom``: per-layer arrays, or None for the zero round-0 state).
     ``cfg.topology`` routes the combine through the two-level pod tree
     (sharded over the mesh's 'pod' axis when one is active).
+    ``cfg.defense`` hardens the combine against hostile uploads (see
+    ``strategies.DEFENSES``); ``probe`` is the server's (phi_in,
+    phi_out) screening batch, required by defense="screen" only.
     Returns ``(new_params, new_smom)``."""
     agg = strategies.get_aggregation(cfg.aggregation)
+    strategies.validate_defense(cfg.defense, agg.combine)
     topo = _topology_of(cfg)
     if topo is not None:
         strategies.partial_kind(agg)   # fail loudly for tree-less combines
     if agg.combine == "product":
+        if cfg.defense == "screen":
+            ks_all, weights, _ = _screen_uploads(params, ks_all, weights,
+                                                 eps, cfg, probe)
+            factors = None  # factor the SANITIZED K's, not the raw ones
         # no additive delta to smooth (FedSpec rejects server_opt here)
         return (aggregate_product(params, ks_all, weights, eps,
                                   impl=cfg.impl, factors=factors,
                                   topo=topo, mesh=mesh), None)
+    if cfg.defense == "clip":
+        # clipped uploads flow through the standard weighted mean below
+        ks_all, weights = _clip_uploads(ks_all, weights, cfg.clip_norm)
+    robust = cfg.defense in ("trimmed_mean", "median")
+    if robust and topo is not None:
+        raise ValueError(
+            f"defense {cfg.defense!r} needs every upload at the server "
+            "(order statistics do not decompose over pod partial sums) — "
+            "topology='flat' only")
+    # order statistics treat every valid node equally (data-volume
+    # weights only gate VALIDITY: a 0-weight or non-finite upload never
+    # enters the sort window)
+    valid = ((weights > 0) & strategies.finite_nodes(ks_all)
+             if robust else None)
+
+    def k_mean(ks):
+        if robust:
+            return strategies.robust_combine(ks, valid, cfg.defense,
+                                             cfg.trim_frac)
+        return _mean_generators(ks, weights, topo, mesh)
+
     if server_opt == "none":
-        return (aggregate_average(params, ks_all, weights, eps,
-                                  impl=cfg.impl, topo=topo, mesh=mesh),
-                None)
+        if not robust:
+            return (aggregate_average(params, ks_all, weights, eps,
+                                      impl=cfg.impl, topo=topo, mesh=mesh),
+                    None)
+        new_params = []
+        for us, ks in zip(params, ks_all):
+            upd = ql.expm_herm(k_mean(ks), eps)  # (I_l, m_l, d, d)
+            new_params.append(_chain(us, upd, cfg.impl))
+        return new_params, None
     new_params, new_smom = [], []
     for i, (us, ks) in enumerate(zip(params, ks_all)):
-        k_bar = _mean_generators(ks, weights, topo, mesh)
+        k_bar = k_mean(ks)
         m2, eff = fserver_opt.generator_step(
             server_opt, server_beta, None if smom is None else smom[i],
             k_bar)
@@ -412,7 +513,7 @@ def _aggregate_impl(params: qnn.Params, smom, ks_all: List[jax.Array],
 def _server_round_impl(params: qnn.Params, smom, dataset: QuantumDataset,
                        key: jax.Array, eta, eps, server_beta,
                        cfg: QuantumFedConfig, mesh=None,
-                       server_opt: str = "none"):
+                       server_opt: str = "none", probe=None):
     """Returns ``(new_params, new_smom, err_bound)`` — err_bound is the
     round's accumulated approximation-error certificate (the per-node
     bounds combined with the aggregation weights; a 0.0 scalar for exact
@@ -434,7 +535,7 @@ def _server_round_impl(params: qnn.Params, smom, dataset: QuantumDataset,
     ks_all = _transmit_impl(ks_all, k_noise, cfg)
     new_params, new_smom = _aggregate_impl(
         params, smom, ks_all, weights, eps, server_beta, cfg, server_opt,
-        factors=factors, mesh=mesh)
+        factors=factors, mesh=mesh, probe=probe)
     rdt = ql.real_dtype(ql.default_dtype())
     err_bound = (jnp.sum(weights.astype(rdt) * bounds.astype(rdt))
                  if certify else jnp.zeros((), rdt))
@@ -448,17 +549,18 @@ _server_round = functools.partial(
 
 @functools.partial(jax.jit, static_argnames=("cfg", "server_opt"))
 def _server_round_stacked(params, smom, dataset, keys, eta, eps,
-                          server_beta, cfg, server_opt):
-    body = lambda p, sm, ds, k, et, ep, sb: _server_round_impl(
-        p, sm, ds, k, et, ep, sb, cfg, None, server_opt)
+                          server_beta, probe, cfg, server_opt):
+    body = lambda p, sm, ds, k, et, ep, sb, pr: _server_round_impl(
+        p, sm, ds, k, et, ep, sb, cfg, None, server_opt, pr)
     return jax.vmap(body)(params, smom, dataset, keys, eta, eps,
-                          server_beta)
+                          server_beta, probe)
 
 
 def server_round_stacked(params: qnn.Params, dataset: QuantumDataset,
                          keys: jax.Array, cfg: QuantumFedConfig, *,
                          smom=None, eta=None, eps=None,
-                         server_opt: str = "none", server_beta=None):
+                         server_opt: str = "none", server_beta=None,
+                         probe=None):
     """One QuanFedPS round for a STACK of independent federations — the
     multi-tenant serving hot path (``repro.core.fed.serve``).
 
@@ -490,7 +592,8 @@ def server_round_stacked(params: qnn.Params, dataset: QuantumDataset,
 
     return _server_round_stacked(
         params, smom, dataset, jnp.asarray(keys), vec(eta, cfg.eta),
-        vec(eps, cfg.eps), vec(server_beta, 0.9), static_cfg, server_opt)
+        vec(eps, cfg.eps), vec(server_beta, 0.9), probe, static_cfg,
+        server_opt)
 
 
 def _resolve_fanout(cfg: QuantumFedConfig) -> str:
@@ -530,22 +633,24 @@ def server_round(params: qnn.Params, dataset: QuantumDataset,
 
 def server_round_opt(params: qnn.Params, smom, dataset: QuantumDataset,
                      key: jax.Array, cfg: QuantumFedConfig,
-                     server_opt: str = "none", server_beta: float = 0.9):
+                     server_opt: str = "none", server_beta: float = 0.9,
+                     probe=None):
     """``server_round`` threading the server-optimizer momentum state:
     returns ``(new_params, new_smom)`` (``new_smom`` None when
-    ``server_opt == "none"``)."""
+    ``server_opt == "none"``). ``probe``: the server's (phi_in, phi_out)
+    screening batch — required when ``cfg.defense == "screen"``."""
     fserver_opt.validate(server_opt)
     static_cfg, mesh = _round_statics(cfg)
     new_params, new_smom, _ = _server_round(
         params, smom, dataset, key, cfg.eta, cfg.eps, server_beta,
-        static_cfg, mesh, server_opt)
+        static_cfg, mesh, server_opt, probe)
     return new_params, new_smom
 
 
 def server_round_certified(params: qnn.Params, dataset: QuantumDataset,
                            key: jax.Array, cfg: QuantumFedConfig,
                            smom=None, server_opt: str = "none",
-                           server_beta: float = 0.9):
+                           server_beta: float = 0.9, probe=None):
     """``server_round_opt`` that also surfaces the round's accumulated
     approximation-error certificate: returns ``(new_params, new_smom,
     err_bound)``. err_bound is a real scalar bounding the total max-abs
@@ -558,7 +663,7 @@ def server_round_certified(params: qnn.Params, dataset: QuantumDataset,
     fserver_opt.validate(server_opt)
     static_cfg, mesh = _round_statics(cfg)
     return _server_round(params, smom, dataset, key, cfg.eta, cfg.eps,
-                         server_beta, static_cfg, mesh, server_opt)
+                         server_beta, static_cfg, mesh, server_opt, probe)
 
 
 # Per-phase entry points: same bodies as the fused round, each under its
@@ -613,24 +718,27 @@ def transmit_phase(ks_all: List[jax.Array], key: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("cfg", "mesh", "server_opt"))
 def _aggregate_jit(params, smom, ks_all, weights, eps, server_beta, cfg,
-                   mesh, server_opt):
+                   mesh, server_opt, probe=None):
     return _aggregate_impl(params, smom, ks_all, weights, eps,
-                           server_beta, cfg, server_opt, mesh=mesh)
+                           server_beta, cfg, server_opt, mesh=mesh,
+                           probe=probe)
 
 
 def aggregate_phase(params: qnn.Params, ks_all: List[jax.Array],
                     weights: jax.Array, cfg: QuantumFedConfig,
                     smom=None, server_opt: str = "none",
-                    server_beta: float = 0.9):
+                    server_beta: float = 0.9, probe=None):
     """Phase 4: strategy combine into the global model; returns
     ``(new_params, new_smom)``. ``ks_all`` may stack ANY number of
     uploads (async commits K of a cohort's N_p) — under a two-level
     topology the stack height must still split into ``cfg.pods`` equal
-    pods (spec validation gates the async commit size)."""
+    pods (spec validation gates the async commit size). ``probe``: the
+    server's screening batch for ``cfg.defense == "screen"``."""
     fserver_opt.validate(server_opt)
     static_cfg, mesh = _round_statics(cfg)
     return _aggregate_jit(params, smom, ks_all, weights, cfg.eps,
-                          server_beta, static_cfg, mesh, server_opt)
+                          server_beta, static_cfg, mesh, server_opt,
+                          probe)
 
 
 def _round_statics(cfg: QuantumFedConfig):

@@ -213,9 +213,11 @@ def test_unequal_minibatch_draws_only_valid_pairs(x64):
 
 
 # ------------------------------------------------- schedules end-to-end
-def test_quantum_dropout_all_stragglers_is_identity(x64):
-    """dropout_rate=1.0: every sampled node drops, weights renormalize
-    to zero, the aggregate is the identity update."""
+def test_quantum_dropout_all_stragglers_fails_loud_or_redraws(x64):
+    """dropout_rate=1.0 (every node drops every round) fails loud
+    instead of silently renormalizing a zero weight mass; below 1.0 an
+    all-dropped draw re-draws until a survivor remains, so extreme
+    straggler rates still produce finite unitary rounds."""
     _, ds, _ = qdata.make_federated_dataset(jax.random.PRNGKey(16), 2,
                                             num_nodes=4, n_per_node=4,
                                             n_test=8)
@@ -226,8 +228,15 @@ def test_quantum_dropout_all_stragglers_is_identity(x64):
                                    eps=0.1, aggregation=agg,
                                    participation="dropout",
                                    dropout_rate=1.0)
-        out = fed.server_round(params, ds, jax.random.PRNGKey(18), cfg)
-        assert _max_err(out, params) <= 1e-10
+        with pytest.raises(ValueError, match="dropout_rate"):
+            fed.server_round(params, ds, jax.random.PRNGKey(18), cfg)
+        out = fed.server_round(params, ds, jax.random.PRNGKey(18),
+                               cfg._replace(dropout_rate=0.97))
+        for p in out:
+            for u in p:
+                assert bool(ql.is_unitary(u, atol=1e-8))
+        assert all(bool(np.all(np.isfinite(np.asarray(u))))
+                   for p in out for u in p)
 
 
 @pytest.mark.parametrize("schedule,kw", [
